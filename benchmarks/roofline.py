@@ -1,0 +1,121 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16] [--md out.md]
+
+Per (arch × shape) cell, from experiments/dryrun/<mesh>/*.json:
+
+    compute term    = HLO_FLOPs/device   / 197e12  (bf16 peak, TPU v5e)
+    memory term     = HLO_bytes/device   / 819e9   (HBM bandwidth)
+    collective term = coll_bytes/device  / 50e9    (per ICI link)
+
+plus MODEL_FLOPS = 6·N_active·D, the useful-compute ratio, the dominant term,
+and the roofline fraction  (MODEL_FLOPS / chips / peak) / max(term)  — the
+fraction of bf16 peak each chip would sustain on *useful* flops if the
+dominant term set the step time.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12        # bf16 / chip, TPU v5e
+HBM_BW = 819e9             # B/s / chip
+LINK_BW = 50e9             # B/s / ICI link
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def analyze(rec: dict) -> dict:
+    chips = rec["chips"]
+    flops_dev = rec["flops_per_device"]
+    bytes_dev = rec["bytes_accessed_per_device"]
+    coll_dev = rec["collective_bytes_per_device"]
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    model_flops = 6.0 * rec["active_param_count"] * rec["tokens_per_step"]
+    useful_ratio = model_flops / max(flops_dev * chips, 1.0)
+    roofline_frac = (model_flops / chips / PEAK_FLOPS) / max(terms[dom], 1e-30)
+    # decode cells: ideal memory = params(bf16) + compressed cache, read once
+    ideal = None
+    if rec["kind"] == "decode":
+        cache_bytes = (rec["cache_floats_per_token"] * 2
+                       * rec["tokens_per_step"] / max(rec["tokens_per_step"], 1))
+        # cache over full context: floats/token × seq× batch × 2B
+        ideal = (rec["param_count"] * 2 / chips) / HBM_BW
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        kind=rec["kind"],
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        dominant=dom, model_flops=model_flops, useful_ratio=useful_ratio,
+        roofline_frac=roofline_frac,
+        peak_gib=rec["memory"]["peak_estimate_bytes"] / 2**30,
+        fits_16g=rec["memory"]["peak_estimate_bytes"] < 16 * 2**30,
+    )
+
+
+NOTES = {
+    ("compute", "train"): "cut recompute (remat policy) / pad waste; MFU-bound",
+    ("memory", "train"): "activation traffic — fuse/bigger per-chip batch",
+    ("collective", "train"): "SP gathers + grad reduce dominate — overlap or shrink via bf16 grads / fewer repeats",
+    ("compute", "prefill"): "S² attention flops — flash kernel target",
+    ("memory", "prefill"): "KV write + activation traffic",
+    ("collective", "prefill"): "SP gathers of 32k activations dominate",
+    ("compute", "decode"): "GEMV-bound — batch more requests",
+    ("memory", "decode"): "cache read/step — EliteKV ratio is the lever",
+    ("collective", "decode"): "per-layer TP all-reduces of tiny tensors — batch or duplicate",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", default="")
+    args = ap.parse_args()
+
+    rows, skips = [], []
+    for p in sorted(Path(args.dir, args.mesh).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("skipped"):
+            skips.append((rec["arch"], rec["shape"], rec["reason"]))
+            continue
+        if "__" in p.stem and len(p.stem.split("__")) > 2:
+            continue  # variants handled by §Perf
+        rows.append(analyze(rec))
+
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    hdr = (f"| arch | shape | compute s | memory s | collective s | dominant "
+           f"| 6ND/HLO | roofline frac | peak GiB | fits 16G | next lever |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        note = NOTES.get((r["dominant"], r["kind"]), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3f} | "
+            f"{r['t_memory']:.3f} | {r['t_collective']:.3f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{r['peak_gib']:.1f} | {'✅' if r['fits_16g'] else '❌'} | {note} |")
+    out = "\n".join(lines)
+    print(out)
+    if skips:
+        print("\nskipped cells:")
+        for a, s, why in skips:
+            print(f"  {a} × {s}: {why}")
+    worst = sorted((r for r in rows if r["kind"] == "train"),
+                   key=lambda r: r["roofline_frac"])[:3]
+    collbound = sorted(rows, key=lambda r: -r["t_collective"] /
+                       max(r["t_compute"] + r["t_memory"], 1e-30))[:3]
+    print("\nworst roofline fraction (train):",
+          [(r["arch"], r["shape"], round(r["roofline_frac"], 3)) for r in worst])
+    print("most collective-bound:",
+          [(r["arch"], r["shape"]) for r in collbound])
+    if args.md:
+        Path(args.md).write_text(out + "\n")
+
+
+if __name__ == "__main__":
+    main()

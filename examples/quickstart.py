@@ -1,0 +1,57 @@
+"""Quickstart: build a small RoPE LM, convert it to EliteKV at a 25% KV cache,
+and verify the compressed model decodes correctly.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, make_inputs
+from repro.configs.base import EliteKVConfig
+from repro.core import convert
+from repro.core.cache import cache_ratio, model_cache_floats_per_token
+from repro.models import lm
+
+
+def main():
+    # 1. a small llama-family model (TinyLlama config family, reduced for CPU)
+    cfg = get_config("tinyllama_1_1b").reduced(num_layers=4)
+    key = jax.random.PRNGKey(0)
+    params, buffers = lm.init(key, cfg)
+    print(f"baseline: {cfg.name}  cache/token = "
+          f"{model_cache_floats_per_token(cfg)} floats")
+
+    # 2. RoPElite search + joint low-rank decomposition (paper §3) at ~25%
+    calib = make_inputs(cfg, 2, 64, "train", seed=1)
+    ek = EliteKVConfig(enabled=True, elite_r=4,
+                       d_ckv=int(0.25 * 2 * cfg.n_kv_heads * cfg.head_dim)
+                       - 2 * 4 * cfg.n_kv_heads)
+    eparams, ebuffers, ecfg = convert.elitekv_from_baseline(
+        params, buffers, cfg, calib, ek, method="greedy")
+    print(f"elitekv:  r={ek.elite_r} d_ckv={ek.d_ckv}  cache/token = "
+          f"{model_cache_floats_per_token(ecfg)} floats  "
+          f"(ratio {cache_ratio(ecfg, cfg):.3f})")
+
+    # 3. the compressed model decodes — prefill + absorbed decode against the
+    #    compressed cache only
+    B, S = 2, 32
+    batch = make_inputs(ecfg, B, S, "train", seed=2)
+    full_logits, _ = lm.apply_train(eparams, ebuffers, ecfg, batch)
+    cache = lm.init_cache(ecfg, B, S, dtype=jnp.float32)
+    lp, cache = lm.apply_prefill(eparams, ebuffers, ecfg,
+                                 {"tokens": batch["tokens"][:, :S - 4]}, cache)
+    err = float(jnp.max(jnp.abs(lp - full_logits[:, :S - 4])))
+    for t in range(S - 4, S):
+        ld, cache = lm.apply_decode(eparams, ebuffers, ecfg,
+                                    {"tokens": batch["tokens"][:, t:t + 1]}, cache)
+        err = max(err, float(jnp.max(jnp.abs(ld[:, 0] - full_logits[:, t]))))
+    print(f"absorbed-decode max |Δlogit| vs full forward: {err:.2e}  "
+          f"(cache never re-rotated)")
+    assert err < 1e-3
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

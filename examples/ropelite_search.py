@@ -1,0 +1,38 @@
+"""Visualize RoPElite frequency preferences (paper Fig. 2) as ASCII heat rows:
+which frequency chunks each head of each layer keeps at r=8, under the three
+selection methods.
+
+    PYTHONPATH=src python examples/ropelite_search.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config, make_inputs
+from repro.core import ropelite
+from repro.models import lm
+
+
+def main():
+    cfg = get_config("llama2_7b").reduced(
+        num_layers=3, n_heads=8, n_kv_heads=8, d_head=32, d_model=256)
+    key = jax.random.PRNGKey(0)
+    params, buffers = lm.init(key, cfg)
+    batch = make_inputs(cfg, 2, 48, "train", seed=7)
+
+    C = cfg.head_dim // 2
+    for method in ("greedy", "contribution", "uniform"):
+        sets = ropelite.search_model(params, buffers, cfg, batch, r=8,
+                                     method=method)
+        print(f"\n=== {method} (chunk 0 = highest frequency, {C - 1} = lowest) ===")
+        for li in sorted(sets):
+            idx = np.asarray(sets[li])
+            for h in range(idx.shape[0]):
+                row = ["·"] * C
+                for rank, c in enumerate(idx[h]):
+                    row[int(c)] = str(min(rank + 1, 9))
+                print(f"L{li}H{h:<2d} {''.join(row)}")
+    print("\ndigits = greedy pick order (1 = most important chunk)")
+
+
+if __name__ == "__main__":
+    main()

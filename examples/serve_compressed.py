@@ -1,0 +1,43 @@
+"""Batched serving with the compressed EliteKV cache: a small request mix
+(prefill + multi-step greedy decode) with cache accounting per request.
+
+    PYTHONPATH=src python examples/serve_compressed.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import EliteKVConfig
+from repro.core.cache import cache_ratio, measured_cache_bytes
+from repro.models import lm
+from repro.runtime import serve_loop
+
+
+def main():
+    base = get_config("yi_6b").reduced(num_layers=4)
+    elite = dataclasses.replace(
+        base, elitekv=EliteKVConfig(enabled=True, elite_r=4, d_ckv=32))
+    key = jax.random.PRNGKey(0)
+
+    for tag, cfg in [("baseline-GQA", base), ("EliteKV-25%", elite)]:
+        params, buffers = lm.init(key, cfg)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (8, 24), 0,
+                                     cfg.vocab_size, jnp.int32)
+        t0 = time.time()
+        out, stats = serve_loop.generate(params, buffers, cfg, prompts, 16)
+        dt = time.time() - t0
+        print(f"{tag:14s} ratio={cache_ratio(cfg, base):5.3f}  "
+              f"cache={stats.cache_bytes / 2**20:7.2f} MiB  "
+              f"{stats.decoded_tokens / dt:6.1f} tok/s  "
+              f"sample={out[0, :8].tolist()}")
+
+    print("\nRatio of measured cache bytes should equal the paper formula "
+          "(2·r·n_kv + d_ckv) / (2·n_kv·d_h) — see tests/test_serve.py.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, EliteKVConfig, ModelConfig,
+                                ShapeConfig, cell_applicable, get_config,
+                                input_specs, list_archs, make_inputs)

@@ -1,0 +1,12 @@
+"""InternVL2-2B [arXiv:2404.16821; hf]: InternLM2 backbone 24L d=2048 16H kv=8.
+
+InternViT frontend is a STUB: input_specs supplies precomputed patch embeddings
+(256 tokens) prepended to the text sequence.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2_2b", family="vlm", num_layers=24, d_model=2048,
+    n_heads=16, n_kv_heads=8, d_ff=8192, vocab_size=92553,
+    frontend="vision", n_frontend_tokens=256,
+)

@@ -1,0 +1,11 @@
+"""MiniCPM-2B [arXiv:2404.06395; hf]: 40L d=2304 36H kv=36 dff=5760 vocab=122753.
+
+Llama-like arch; trained with the WSD schedule (implemented in optim/schedule.py).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm_2b", family="dense", num_layers=40, d_model=2304,
+    n_heads=36, n_kv_heads=36, d_ff=5760, vocab_size=122753,
+    tie_embeddings=True,
+)

@@ -1,0 +1,51 @@
+"""KV-cache size accounting — the quantity the paper optimizes.
+
+Formulas (paper §3.2), per token per attention layer, in floats:
+    vanilla MHA/GQA:      2 · n_kv · d_h
+    RoPElite + J-LRD:     2 · r · n_kv + d_ckv
+    RoPElite + S-LRD:     2 · r · n_kv + d_ck + d_cv
+Mamba layers hold O(1) state instead (conv + ssm), reported separately.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def attn_cache_floats_per_token(cfg: ModelConfig) -> int:
+    return cfg.elitekv.cache_per_token_per_layer(cfg.n_kv_heads, cfg.head_dim)
+
+
+def model_cache_floats_per_token(cfg: ModelConfig) -> int:
+    return cfg.n_attn_layers * attn_cache_floats_per_token(cfg)
+
+
+def ssm_state_floats(cfg: ModelConfig, batch: int) -> int:
+    n_ssm = sum(1 for i in range(cfg.num_layers) if cfg.layer_kind(i) == "ssm")
+    per = (cfg.ssm_conv - 1) * cfg.d_inner + cfg.d_inner * cfg.ssm_state
+    return n_ssm * per * batch
+
+
+def cache_ratio(cfg_elite: ModelConfig, cfg_base: ModelConfig) -> float:
+    """Attention-KV compression ratio vs the unmodified model."""
+    a = model_cache_floats_per_token(cfg_elite)
+    b = model_cache_floats_per_token(cfg_base)
+    return a / b if b else 1.0
+
+
+def measured_cache_bytes(cache, batch: int, max_len: int) -> Dict[str, int]:
+    """Actual bytes in a live cache pytree, split attn vs ssm."""
+    attn = ssm = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(cache["blocks"]):
+        name = jax.tree_util.keystr(path)
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        if "conv" in name or "ssm" in name:
+            ssm += nbytes
+        else:
+            attn += nbytes
+    return {"attn_bytes": attn, "ssm_bytes": ssm,
+            "attn_bytes_per_token": attn // (batch * max_len)}

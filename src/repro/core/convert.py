@@ -1,0 +1,198 @@
+"""Model surgery: baseline GQA/MHA checkpoint → EliteKV checkpoint.
+
+Steps per attention layer (paper §3 pipeline):
+  1. RoPElite search gives elite chunk indices per KV head (greedy order).
+  2. Permute W^q / W^k columns per head so elite chunks occupy dims [0, 2r)
+     — query heads use their KV group's elite order (keys are shared).
+  3. Slice W^k into the elite part (kept dense, rotated at runtime) and the
+     non-elite remainder; J-LRD (or S-LRD) factorize [W^k_ne , W^v].
+  4. Store the elite theta values as a non-trainable buffer.
+
+Also provides the *GQA mean-pool* conversion (Ainslie et al. 2023) — the
+paper's comparison baseline — and EliteKV dimension selection helpers
+(paper App. C: 128-aligned d_ckv, no-extra-parameter rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EliteKVConfig, ModelConfig
+from repro.core import lrd as lrd_lib
+from repro.core import rope as rope_lib
+
+
+def _perm_for(elite_idx: np.ndarray, C: int) -> np.ndarray:
+    """Dim permutation [d_h] putting elite chunk pairs first (greedy order)."""
+    elite = [int(c) for c in elite_idx]
+    rest = [c for c in range(C) if c not in elite]
+    dims = []
+    for c in elite + rest:
+        dims += [2 * c, 2 * c + 1]
+    return np.asarray(dims, np.int32)
+
+
+def convert_layer(attn_params: Dict, cfg: ModelConfig, e: EliteKVConfig,
+                  elite_idx: jnp.ndarray) -> Tuple[Dict, Dict]:
+    """One attention layer → (elite params, buffers)."""
+    dh, nkv, nh = cfg.head_dim, cfg.n_kv_heads, cfg.n_heads
+    C = dh // 2
+    r = e.elite_r
+    r2 = 2 * r
+    elite_idx = np.asarray(elite_idx)
+    assert elite_idx.shape == (nkv, r)
+
+    wq = np.asarray(attn_params["wq"])    # [d, nh, dh]
+    wk = np.asarray(attn_params["wk"])    # [d, nkv, dh]
+    wv = np.asarray(attn_params["wv"])    # [d, nkv, dh]
+
+    wq_p = np.empty_like(wq)
+    wk_p = np.empty_like(wk)
+    G = cfg.q_group
+    for h_kv in range(nkv):
+        perm = _perm_for(elite_idx[h_kv], C)
+        wk_p[:, h_kv, :] = wk[:, h_kv, perm]
+        for g in range(G):
+            hq = h_kv * G + g
+            wq_p[:, hq, :] = wq[:, hq, perm]
+
+    wk_e = wk_p[:, :, :r2]
+    wk_ne = wk_p[:, :, r2:]
+
+    params = {
+        "wq": jnp.asarray(wq_p, jnp.float32),
+        "wk_e": jnp.asarray(wk_e, jnp.float32),
+        "wo": jnp.asarray(attn_params["wo"], jnp.float32),
+    }
+    if e.lrd == "joint":
+        a_kv, bk, bv = lrd_lib.jlrd(wk_ne, wv, e.d_ckv)
+        params["a_kv"], params["bk"], params["bv"] = a_kv, jnp.asarray(bk), jnp.asarray(bv)
+    else:
+        a_k, a_v, bk, bv = lrd_lib.slrd(jnp.asarray(wk_ne), jnp.asarray(wv), e.d_ck, e.d_cv)
+        params["a_k"], params["a_v"] = a_k, a_v
+        params["bk"], params["bv"] = jnp.asarray(bk), jnp.asarray(bv)
+
+    freqs = np.asarray(rope_lib.chunk_freqs(dh, cfg.rope_theta))
+    buffers = {"elite_freqs": jnp.asarray(freqs[elite_idx], jnp.float32)}
+    return params, buffers
+
+
+def convert_model(params: Dict, buffers: Dict, cfg: ModelConfig,
+                  elite_sets: Dict[int, jnp.ndarray],
+                  elitekv: EliteKVConfig) -> Tuple[Dict, Dict, ModelConfig]:
+    """Whole-model conversion.  ``elite_sets``: {abs layer idx: [nkv, r]}."""
+    assert not cfg.elitekv.enabled
+    new_cfg = dataclasses.replace(
+        cfg, elitekv=dataclasses.replace(elitekv, enabled=True))
+    P_ = cfg.block_period
+    new_params = {k: v for k, v in params.items() if k != "blocks"}
+    new_blocks = {}
+    new_buf_blocks = {}
+    for p_key, blk in params["blocks"].items():
+        p_pos = int(p_key[1:])
+        if cfg.layer_kind(p_pos) != "attn":
+            new_blocks[p_key] = blk
+            new_buf_blocks[p_key] = buffers["blocks"].get(p_key, {})
+            continue
+        n_super = jax.tree.leaves(blk)[0].shape[0]
+        per_layer_p, per_layer_b = [], []
+        for s in range(n_super):
+            li = s * P_ + p_pos
+            attn_s = jax.tree.map(lambda t: t[s], blk["attn"])
+            pe, be = convert_layer(attn_s, cfg, elitekv, elite_sets[li])
+            per_layer_p.append(pe)
+            per_layer_b.append(be)
+        stacked_attn = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer_p)
+        stacked_buf = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer_b)
+        nb = {k: v for k, v in blk.items() if k != "attn"}
+        nb["attn"] = stacked_attn
+        new_blocks[p_key] = nb
+        new_buf_blocks[p_key] = stacked_buf
+    new_params["blocks"] = new_blocks
+    return new_params, {"blocks": new_buf_blocks}, new_cfg
+
+
+def elitekv_from_baseline(params, buffers, cfg, calib_batch, elitekv: EliteKVConfig,
+                          method: str = "greedy", moe_impl: str = "dense"):
+    """Search + convert in one call (the paper's full §3 pipeline)."""
+    from repro.core import ropelite
+    sets = ropelite.search_model(params, buffers, cfg, calib_batch,
+                                 elitekv.elite_r, method=method, moe_impl=moe_impl)
+    return convert_model(params, buffers, cfg, sets, elitekv)
+
+
+# ---------------------------------------------------------------------------
+# GQA mean-pool baseline (Ainslie et al.) — paper's comparison point
+# ---------------------------------------------------------------------------
+
+def to_gqa(params: Dict, cfg: ModelConfig, new_n_kv: int) -> Tuple[Dict, ModelConfig]:
+    assert cfg.n_kv_heads % new_n_kv == 0
+    m = cfg.n_kv_heads // new_n_kv
+    new_cfg = dataclasses.replace(cfg, n_kv_heads=new_n_kv)
+
+    def pool(w):  # [n_super, d, nkv, dh] → mean over groups of m kv heads
+        ns, d, nkv, dh = w.shape
+        return w.reshape(ns, d, new_n_kv, m, dh).mean(axis=3)
+
+    new_params = {k: v for k, v in params.items() if k != "blocks"}
+    new_blocks = {}
+    for p_key, blk in params["blocks"].items():
+        p_pos = int(p_key[1:])
+        if cfg.layer_kind(p_pos) != "attn" or "wk" not in blk.get("attn", {}):
+            new_blocks[p_key] = blk
+            continue
+        nb = dict(blk)
+        attn = dict(blk["attn"])
+        attn["wk"] = pool(blk["attn"]["wk"])
+        attn["wv"] = pool(blk["attn"]["wv"])
+        nb["attn"] = attn
+        new_blocks[p_key] = nb
+    new_params["blocks"] = new_blocks
+    return new_params, new_cfg
+
+
+# ---------------------------------------------------------------------------
+# dimension selection (paper App. C)
+# ---------------------------------------------------------------------------
+
+def pick_dims(cfg: ModelConfig, target_cache_ratio: float, align: int = 128,
+              r_candidates=(2, 4, 8, 16, 32)) -> EliteKVConfig:
+    """Choose (r, d_ckv) hitting a target cache ratio.
+
+    Rules (App. C): d_ckv MXU-aligned (128 preferred; falls back 64/32/16 for
+    GQA archs whose whole cache budget is below 128 — the paper's MHA models
+    never hit this); no parameter increase vs baseline; among valid configs
+    prefer closest ratio, then the largest r (more rotary signal).
+    """
+    dh, nkv, nh, d = cfg.head_dim, cfg.n_kv_heads, cfg.n_heads, cfg.d_model
+    full = 2 * nkv * dh
+    base_params = d * dh * 2 * nkv          # W^k + W^v
+    best = None
+    for r in sorted(r_candidates, reverse=True):
+        if 2 * r >= dh:
+            continue
+        budget = int(target_cache_ratio * full) - 2 * r * nkv
+        d_ckv = 0
+        for a in (align, 64, 32, 16):
+            if (budget // a) * a >= a:
+                d_ckv = (budget // a) * a
+                break
+        if d_ckv <= 0:
+            continue
+        d_nope = dh - 2 * r
+        new_params = (d * 2 * r * nkv                       # W^k elite
+                      + d * d_ckv                           # A^kv
+                      + d_ckv * (nkv * d_nope + nkv * dh))  # B^k, B^v
+        if new_params > base_params:
+            continue
+        got = (2 * r * nkv + d_ckv) / full
+        cand = EliteKVConfig(enabled=True, elite_r=r, d_ckv=d_ckv, lrd="joint")
+        if best is None or abs(got - target_cache_ratio) < best[0] - 1e-9:
+            best = (abs(got - target_cache_ratio), cand)
+    if best is None:
+        raise ValueError(f"no valid EliteKV dims for ratio {target_cache_ratio}")
+    return best[1]

@@ -1,0 +1,235 @@
+"""EliteKV attention: RoPElite partial rotation + joint low-rank KV latent.
+
+Weight layout (after conversion from a baseline GQA/MHA checkpoint, or direct
+init for from-scratch training):
+
+  wq    [d, n_h, d_h]     — query projection, columns permuted per head so that
+                            dims [0:2r) are that head's KV-group elite chunks
+                            (in greedy-selection order) and [2r:) the non-elite.
+  wk_e  [d, n_kv, 2r]     — elite key slice (rotated with per-head elite freqs).
+  a_kv  [d, d_ckv]        — J-LRD shared down-projection  (or a_k/a_v for S-LRD).
+  bk    [d_c, n_kv, d_h-2r] — K up-projection  (latent → non-elite key dims).
+  bv    [d_c, n_kv, d_h]  — V up-projection.
+  wo    [n_h, d_h, d]     — output projection (unchanged).
+
+Buffers (non-trainable): ``elite_freqs`` [n_kv, r] — theta values of the elite
+chunks, in the order the greedy search picked them.
+
+Cache per token per layer (paper §3.2):  2·r·n_kv  (rotated elite keys, stored
+POST-rotation — never re-rotated at decode)  +  d_ckv  (shared latent).
+
+Decode uses MLA-style *absorption at the activation level*:
+    q_ne · k_neᵀ = q_ne · (c·bk)ᵀ = (q_ne·bkᵀ) · cᵀ        (bk absorbed into q)
+    o = p · v = p · (c·bv) = (p·c) · bv                     (bv absorbed into o)
+so only the compressed cache is ever read — the paper's systems win.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rope as rope_lib
+from repro.models.attention import causal_mask
+
+
+# ---------------------------------------------------------------------------
+# init (from scratch; convert.py builds these from a baseline checkpoint)
+# ---------------------------------------------------------------------------
+
+def init(key, cfg) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (params, buffers)."""
+    from repro.models.layers import dense_init
+    d, dh, nh, nkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    e = cfg.elitekv
+    r2 = 2 * e.elite_r
+    d_nope = dh - r2
+    ks = jax.random.split(key, 8)
+    params = {
+        "wq": dense_init(ks[0], (d, nh, dh)),
+        "wk_e": dense_init(ks[1], (d, nkv, r2)),
+        "wo": dense_init(ks[2], (nh, dh, d), in_axis=2, scale=(nh * dh) ** -0.5),
+    }
+    if e.lrd == "joint":
+        params["a_kv"] = dense_init(ks[3], (d, e.d_ckv))
+        params["bk"] = dense_init(ks[4], (e.d_ckv, nkv, d_nope), scale=e.d_ckv ** -0.5)
+        params["bv"] = dense_init(ks[5], (e.d_ckv, nkv, dh), scale=e.d_ckv ** -0.5)
+    else:
+        params["a_k"] = dense_init(ks[3], (d, e.d_ck))
+        params["a_v"] = dense_init(ks[6], (d, e.d_cv))
+        params["bk"] = dense_init(ks[4], (e.d_ck, nkv, d_nope), scale=e.d_ck ** -0.5)
+        params["bv"] = dense_init(ks[5], (e.d_cv, nkv, dh), scale=e.d_cv ** -0.5)
+    # default elite chunks: top-r highest frequencies (uniform init; the real
+    # sets come from the RoPElite search at conversion time).
+    freqs = rope_lib.chunk_freqs(dh, cfg.rope_theta)
+    buffers = {"elite_freqs": jnp.tile(freqs[None, :e.elite_r], (nkv, 1))}
+    return params, buffers
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _project_q(params, cfg, x, positions):
+    """Returns rotated q_e [B,S,nh,2r] and linear q_ne [B,S,nh,d_nope]."""
+    dt = x.dtype
+    e = cfg.elitekv
+    r2 = 2 * e.elite_r
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(dt))
+    q_e, q_ne = q[..., :r2], q[..., r2:]
+    return q_e, q_ne
+
+
+def _rot_q(cfg, buffers, q_e, positions):
+    ef_q = rope_lib.expand_kv_to_q(buffers["elite_freqs"], cfg.q_group)  # [nh, r]
+    return rope_lib.apply_elite_rope(q_e, positions, ef_q)
+
+
+def _latents(params, cfg, x):
+    """Down-projected latent(s): (c_k, c_v) — identical object for J-LRD."""
+    dt = x.dtype
+    if cfg.elitekv.lrd == "joint":
+        c = x @ params["a_kv"].astype(dt)
+        return c, c
+    return x @ params["a_k"].astype(dt), x @ params["a_v"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence (training / prefill): materialized K,V
+# ---------------------------------------------------------------------------
+
+def _materialized(params, cfg, buffers, x, positions, constrain=lambda n, t: t):
+    dt = x.dtype
+    e = cfg.elitekv
+    q_e, q_ne = _project_q(params, cfg, x, positions)
+    q_e = _rot_q(cfg, buffers, q_e, positions)
+    k_e = jnp.einsum("bsd,dhe->bshe", x, params["wk_e"].astype(dt))
+    k_e = rope_lib.apply_elite_rope(k_e, positions, buffers["elite_freqs"])
+    c_k, c_v = _latents(params, cfg, x)
+    c_k, c_v = constrain("latent", c_k), constrain("latent", c_v)
+    k_ne = jnp.einsum("bsc,che->bshe", c_k, params["bk"].astype(dt))
+    v = constrain("attn_kv", jnp.einsum("bsc,che->bshe", c_v, params["bv"].astype(dt)))
+    q = constrain("attn_q", jnp.concatenate([q_e, q_ne], axis=-1))
+    k = constrain("attn_kv", jnp.concatenate([k_e, k_ne], axis=-1))
+    return q, k, v, k_e, c_k, c_v
+
+
+def apply_full(params, cfg, buffers, x, positions, constrain=lambda n, t: t) -> jnp.ndarray:
+    from repro.models.attention import _attend
+    q, k, v, *_ = _materialized(params, cfg, buffers, x, positions, constrain)
+    o = _attend(q, k, v, cfg.q_group, cfg.head_dim ** -0.5,
+                chunk_q=cfg.attn_chunk_q, constrain=constrain,
+                unroll=cfg.attn_chunk_unroll)
+    return jnp.einsum("bshe,hed->bsd", o, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    e = cfg.elitekv
+    r2 = 2 * e.elite_r
+    cache = {"k_e": jnp.zeros((batch, max_len, cfg.n_kv_heads, r2), dtype)}
+    if e.lrd == "joint":
+        cache["c"] = jnp.zeros((batch, max_len, e.d_ckv), dtype)
+    else:
+        cache["c_k"] = jnp.zeros((batch, max_len, e.d_ck), dtype)
+        cache["c_v"] = jnp.zeros((batch, max_len, e.d_cv), dtype)
+    return cache
+
+
+def _cache_latents(cache):
+    if "c" in cache:
+        return cache["c"], cache["c"]
+    return cache["c_k"], cache["c_v"]
+
+
+def apply_prefill(params, cfg, buffers, x, positions, cache, constrain=lambda n, t: t):
+    from repro.models.attention import _attend
+    q, k, v, k_e, c_k, c_v = _materialized(params, cfg, buffers, x, positions, constrain)
+    upd = lambda buf, val: jax.lax.dynamic_update_slice(
+        buf, val.astype(buf.dtype), (0,) * buf.ndim)
+    new_cache = dict(cache)
+    new_cache["k_e"] = upd(cache["k_e"], k_e)
+    if "c" in cache:
+        new_cache["c"] = upd(cache["c"], c_k)
+    else:
+        new_cache["c_k"] = upd(cache["c_k"], c_k)
+        new_cache["c_v"] = upd(cache["c_v"], c_v)
+    o = _attend(q, k, v, cfg.q_group, cfg.head_dim ** -0.5,
+                chunk_q=cfg.attn_chunk_q, constrain=constrain,
+                unroll=cfg.attn_chunk_unroll)
+    return jnp.einsum("bshe,hed->bsd", o, params["wo"].astype(x.dtype)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# absorbed decode — reads ONLY the compressed cache
+# ---------------------------------------------------------------------------
+
+def apply_decode(params, cfg, buffers, x, index, cache, use_kernel: bool = False,
+                 constrain=lambda n, t: t):
+    """x: [B,1,d].  Returns (out [B,1,d], new_cache)."""
+    dt = x.dtype
+    e = cfg.elitekv
+    B = x.shape[0]
+    nh, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = cfg.q_group
+    pos = jnp.full((B, 1), index, jnp.int32)
+
+    q_e, q_ne = _project_q(params, cfg, x, pos)
+    q_e = constrain("attn_q", _rot_q(cfg, buffers, q_e, pos))  # [B,1,nh,2r]
+    # absorb bk into the query (activation-level): q_lat [B,1,nh,d_c]
+    bk_q = rope_lib.expand_kv_to_q(
+        jnp.moveaxis(params["bk"], 1, 0), G)                 # [nh, d_c, d_nope]
+    q_lat = constrain("attn_q", jnp.einsum("bshn,hcn->bshc", q_ne, bk_q.astype(dt)))
+
+    # new cache entries
+    k_e_new = jnp.einsum("bsd,dhe->bshe", x, params["wk_e"].astype(dt))
+    k_e_new = rope_lib.apply_elite_rope(k_e_new, pos, buffers["elite_freqs"])
+    c_k_new, c_v_new = _latents(params, cfg, x)
+    new_cache = dict(cache)
+    new_cache["k_e"] = jax.lax.dynamic_update_slice(
+        cache["k_e"], k_e_new.astype(cache["k_e"].dtype), (0, index, 0, 0))
+    if "c" in cache:
+        new_cache["c"] = jax.lax.dynamic_update_slice(
+            cache["c"], c_k_new.astype(cache["c"].dtype), (0, index, 0))
+    else:
+        new_cache["c_k"] = jax.lax.dynamic_update_slice(
+            cache["c_k"], c_k_new.astype(cache["c_k"].dtype), (0, index, 0))
+        new_cache["c_v"] = jax.lax.dynamic_update_slice(
+            cache["c_v"], c_v_new.astype(cache["c_v"].dtype), (0, index, 0))
+
+    K_e = new_cache["k_e"].astype(dt)                        # [B,S,nkv,2r]
+    C_k, C_v = _cache_latents(new_cache)
+    C_k, C_v = C_k.astype(dt), C_v.astype(dt)
+    Smax = K_e.shape[1]
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        o_lat, o_e_scores = None, None  # kernel returns o directly
+        o = kops.elite_decode(
+            q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k, C_v,
+            index=index, q_group=G, scale=dh ** -0.5)
+        o = o.reshape(B, 1, nh, C_v.shape[-1])
+    else:
+        # scores: rotary-elite part (K_e repeated to q heads — GSPMD-clean)
+        # + latent part (shared C, no repeat)
+        K_e_rep = constrain("heads4", jnp.repeat(K_e, G, axis=2)) if G > 1 else K_e
+        s_e = jnp.einsum("bqhe,bkhe->bhqk", q_e, K_e_rep,
+                         preferred_element_type=jnp.float32)
+        s_lat = jnp.einsum("bqhc,bkc->bhqk", q_lat, C_k,
+                           preferred_element_type=jnp.float32)
+        s = s_e + s_lat
+        s = s * (dh ** -0.5)
+        valid = jnp.arange(Smax)[None, None, None, :] <= index
+        s = jnp.where(valid, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(dt)            # [B,nh,1,S]
+        o = jnp.einsum("bhqk,bkc->bqhc", p, C_v)             # [B,1,nh,d_c]
+
+    # absorb bv into the output (activation-level)
+    bv_q = rope_lib.expand_kv_to_q(jnp.moveaxis(params["bv"], 1, 0), G)  # [nh,d_c,dh]
+    o_heads = jnp.einsum("bqhc,hcd->bqhd", o, bv_q.astype(dt))
+    out = jnp.einsum("bshe,hed->bsd", o_heads, params["wo"].astype(dt))
+    return out, new_cache

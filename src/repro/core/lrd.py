@@ -1,0 +1,81 @@
+"""Low-rank decomposition of KV projections (paper §3.2).
+
+J-LRD (the paper's choice): jointly factorize
+    W^kv = [W^k_nonelite(all heads), W^v(all heads)]  ≈  A^kv · B^kv,
+    B^kv = [B^k_J, B^v_J]
+so K-up and V-up share one latent — cache/token/layer = 2·r·n_kv + d_ckv.
+
+S-LRD (ablation): factorize W^k_nonelite and W^v separately with ranks
+(d_ck, d_cv) — cache = 2·r·n_kv + d_ck + d_cv.  ``optimal_slrd_split`` picks
+the error-minimizing (d_ck, d_cv) under a fixed cache budget from the two
+singular spectra (the paper used a greedy search; with the spectra in hand the
+split is solved exactly).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def svd_lowrank(W: jnp.ndarray, rank: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """W [m,n] ≈ A [m,rank] @ B [rank,n]   (A = U, B = Σ Vᵀ as in paper §2.3)."""
+    U, s, Vt = np.linalg.svd(np.asarray(W, np.float64), full_matrices=False)
+    A = U[:, :rank]
+    B = (s[:rank, None] * Vt[:rank, :])
+    return jnp.asarray(A, jnp.float32), jnp.asarray(B, jnp.float32)
+
+
+def jlrd(wk_ne: jnp.ndarray, wv: jnp.ndarray, d_ckv: int):
+    """Joint factorization.
+
+    wk_ne [d, n_kv, d_nope]; wv [d, n_kv, d_h]
+    → a_kv [d, d_ckv], bk [d_ckv, n_kv, d_nope], bv [d_ckv, n_kv, d_h]
+    """
+    d = wk_ne.shape[0]
+    nkv, d_nope = wk_ne.shape[1], wk_ne.shape[2]
+    dh = wv.shape[2]
+    Wk = np.asarray(wk_ne).reshape(d, nkv * d_nope)
+    Wv = np.asarray(wv).reshape(d, nkv * dh)
+    W = np.concatenate([Wk, Wv], axis=1)
+    A, B = svd_lowrank(W, d_ckv)
+    bk = B[:, : nkv * d_nope].reshape(d_ckv, nkv, d_nope)
+    bv = B[:, nkv * d_nope:].reshape(d_ckv, nkv, dh)
+    return A, bk, bv
+
+
+def slrd(wk_ne: jnp.ndarray, wv: jnp.ndarray, d_ck: int, d_cv: int):
+    """Separate factorizations → (a_k, a_v, bk, bv)."""
+    d, nkv, d_nope = wk_ne.shape
+    dh = wv.shape[2]
+    a_k, Bk = svd_lowrank(np.asarray(wk_ne).reshape(d, nkv * d_nope), d_ck)
+    a_v, Bv = svd_lowrank(np.asarray(wv).reshape(d, nkv * dh), d_cv)
+    return a_k, a_v, Bk.reshape(d_ck, nkv, d_nope), Bv.reshape(d_cv, nkv, dh)
+
+
+def reconstruction_error(W: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray) -> float:
+    W = np.asarray(W, np.float64)
+    R = W - np.asarray(A, np.float64) @ np.asarray(B, np.float64)
+    return float(np.linalg.norm(R) / max(np.linalg.norm(W), 1e-12))
+
+
+def optimal_slrd_split(wk_ne: jnp.ndarray, wv: jnp.ndarray, budget: int,
+                       align: int = 1) -> Tuple[int, int]:
+    """Best (d_ck, d_cv) with d_ck + d_cv = budget, minimizing total squared
+    reconstruction error  Σ_{i>d_ck} σ_k,i² + Σ_{i>d_cv} σ_v,i² ."""
+    d, nkv, d_nope = wk_ne.shape
+    dh = wv.shape[2]
+    sk = np.linalg.svd(np.asarray(wk_ne).reshape(d, -1), compute_uv=False)
+    sv = np.linalg.svd(np.asarray(wv).reshape(d, -1), compute_uv=False)
+    tail = lambda s, r: float(np.sum(s[r:] ** 2))
+    best, best_err = None, np.inf
+    for ck in range(align, budget, align):
+        cv = budget - ck
+        if cv < 1 or ck > len(sk) or cv > len(sv):
+            continue
+        err = tail(sk, ck) + tail(sv, cv)
+        if err < best_err:
+            best, best_err = (ck, cv), err
+    assert best is not None
+    return best

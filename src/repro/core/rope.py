@@ -1,0 +1,105 @@
+"""Rotary position embeddings, including EliteKV's per-head *partial* RoPE.
+
+Conventions
+-----------
+* Interleaved pairing: chunk ``i`` of a head vector is ``(x[2i], x[2i+1])``,
+  matching the paper's  I = {[2i : 2i+1]}.
+* Chunk ``i`` carries frequency  theta_i = base ** (-2 i / d_h)  — chunk 0 is the
+  highest frequency, chunk d_h/2 - 1 the lowest ("numbers increase from high to
+  low frequencies", paper Fig. 2).
+* *RoPElite* models store, per KV head, the ``r`` elite frequencies
+  (``elite_freqs`` — the gathered theta values, not indices: projection columns are
+  permuted at conversion time so elite chunks occupy the first ``2r`` dims).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_freqs(d_head: int, theta: float = 10000.0) -> jnp.ndarray:
+    """theta_i for each 2-D chunk: shape [d_head // 2], descending frequency."""
+    i = jnp.arange(d_head // 2, dtype=jnp.float32)
+    return theta ** (-2.0 * i / d_head)
+
+
+def cos_sin(positions: jnp.ndarray, freqs: jnp.ndarray):
+    """cos/sin tables.
+
+    positions: [...P] int/float; freqs: [...F] → cos,sin of shape [...P, ...F]
+    (outer product over the trailing freq axes).
+    """
+    ang = positions.reshape(positions.shape + (1,) * freqs.ndim).astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate interleaved pairs of the last axis of x.
+
+    x: [..., 2C]; cos/sin broadcastable to [..., C].
+    """
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x2 = x.reshape(x.shape[:-1] + (x.shape[-1] // 2, 2))
+    x_even, x_odd = x2[..., 0], x2[..., 1]
+    out_even = x_even * cos - x_odd * sin
+    out_odd = x_even * sin + x_odd * cos
+    out = jnp.stack([out_even, out_odd], axis=-1).reshape(x.shape)
+    return out.astype(orig_dtype)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Full RoPE.  x: [B, S, H, D]; positions: [B, S] or [S]."""
+    f = chunk_freqs(x.shape[-1], theta)                       # [C]
+    cos, sin = cos_sin(positions, f)                          # [B, S, C] or [S, C]
+    if positions.ndim == 1:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return rotate(x, cos, sin)
+
+
+def apply_rope_subset(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                      chunk_mask: jnp.ndarray) -> jnp.ndarray:
+    """RoPE applied only where ``chunk_mask`` is True (per-head masks allowed).
+
+    x: [B, S, H, D]; chunk_mask: [C] or [H, C] booleans.  Non-masked chunks pass
+    through unrotated (the RoPElite "linear" dims).  Used by the greedy search.
+    """
+    f = chunk_freqs(x.shape[-1], theta)
+    cos, sin = cos_sin(positions, f)                          # [S|B,S, C]
+    if positions.ndim == 1:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    m = chunk_mask.astype(jnp.float32)
+    if chunk_mask.ndim == 2:                                  # [H, C]
+        m = m[None, None, :, :]
+    # masked rotation == rotate with angle*mask (identity where mask=0)
+    cos_m = cos * m + (1.0 - m)
+    sin_m = sin * m
+    return rotate(x, cos_m, sin_m)
+
+
+def apply_elite_rope(x: jnp.ndarray, positions: jnp.ndarray,
+                     elite_freqs: jnp.ndarray) -> jnp.ndarray:
+    """Per-head RoPE over the packed elite dims.
+
+    x: [B, S, H, 2r] — the (pre-permuted) elite slice; elite_freqs: [H, r]
+    (theta values per head).  positions: [S] or [B, S].
+    """
+    B, S, H, r2 = x.shape
+    r = r2 // 2
+    assert elite_freqs.shape == (H, r), (elite_freqs.shape, (H, r))
+    if positions.ndim == 1:
+        ang = positions[:, None, None].astype(jnp.float32) * elite_freqs[None]   # [S,H,r]
+        cos, sin = jnp.cos(ang)[None], jnp.sin(ang)[None]                        # [1,S,H,r]
+    else:
+        ang = positions[:, :, None, None].astype(jnp.float32) * elite_freqs[None, None]
+        cos, sin = jnp.cos(ang), jnp.sin(ang)                                    # [B,S,H,r]
+    return rotate(x, cos, sin)
+
+
+def expand_kv_to_q(per_kv: jnp.ndarray, q_group: int) -> jnp.ndarray:
+    """[n_kv, ...] → [n_kv * q_group, ...]: query head h uses kv head h // q_group."""
+    return jnp.repeat(per_kv, q_group, axis=0)

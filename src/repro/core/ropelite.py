@@ -1,0 +1,197 @@
+"""RoPElite (paper Alg. 1): greedy per-head search for elite RoPE chunks.
+
+For each attention head, find the ``r`` 2-D frequency chunks whose rotation the
+head's attention scores depend on most: at every greedy step, add the chunk
+``j`` minimizing  ||s(full RoPE) − s(RoPE on selected ∪ {j})||₁.
+
+Identity used for an O(r·C) search (paper App. B: one forward pass, all layers
+and heads in parallel):  with  D_c = s_rot(c) − s_plain(c)  the per-chunk score
+delta, s(M) − s(full) = −Σ_{c∉M} D_c =: −G(M).  The candidate distance is then
+||G − D_j||₁ and the update after picking j* is  G ← G − D_{j*}.
+
+GQA generalization: elite sets live per **KV head**; candidate distances are
+summed over the query heads of the group (keys are shared, so the chunk choice
+must be, too).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rope as rope_lib
+
+
+def _chunked(x):
+    """[..., D] → [..., C, 2] interleaved-pair view."""
+    return x.reshape(x.shape[:-1] + (x.shape[-1] // 2, 2))
+
+
+def _pair_scores(qc, kc, q_group: int):
+    """qc [B,S,nh,2], kc [B,S,nkv,2] → scores [B,nh,S,S]."""
+    B, S, nh, _ = qc.shape
+    nkv = kc.shape[2]
+    qg = qc.reshape(B, S, nkv, q_group, 2)
+    s = jnp.einsum("bqhgt,bkht->bhgqk", qg, kc, preferred_element_type=jnp.float32)
+    return s.reshape(B, nh, S, S)
+
+
+def _chunk_delta(qch, kch, qch_rot, kch_rot, c, q_group):
+    """D_c for one chunk index (same for all heads)."""
+    take = lambda t: jax.lax.dynamic_index_in_dim(t, c, axis=3, keepdims=False)
+    return (_pair_scores(take(qch_rot), take(kch_rot), q_group)
+            - _pair_scores(take(qch), take(kch), q_group))
+
+
+def greedy_search_layer(q, k, positions, theta: float, q_group: int, r: int,
+                        causal: bool = True) -> jnp.ndarray:
+    """Greedy elite-chunk search for one layer.
+
+    q [B,S,nh,dh] / k [B,S,nkv,dh] — PRE-rotation projections.
+    Returns elite chunk indices in selection order: [nkv, r] int32.
+    """
+    B, S, nh, dh = q.shape
+    nkv = k.shape[2]
+    C = dh // 2
+    q_rot = rope_lib.apply_rope(q, positions, theta)
+    k_rot = rope_lib.apply_rope(k, positions, theta)
+    qch, kch = _chunked(q), _chunked(k)
+    qch_rot, kch_rot = _chunked(q_rot), _chunked(k_rot)
+
+    wmask = (jnp.tril(jnp.ones((S, S), jnp.float32)) if causal
+             else jnp.ones((S, S), jnp.float32))[None, None]
+
+    def delta(c):
+        return _chunk_delta(qch, kch, qch_rot, kch_rot, c, q_group)
+
+    # G = sum_c D_c  (scores(full) - scores(none)), accumulated chunk-by-chunk
+    def acc(G, c):
+        return G + delta(c), None
+    G, _ = jax.lax.scan(acc, jnp.zeros((B, nh, S, S), jnp.float32), jnp.arange(C))
+
+    selected = jnp.zeros((nkv, C), bool)
+    order = jnp.zeros((nkv, r), jnp.int32)
+
+    def iteration(carry, i):
+        G, selected, order = carry
+
+        def cand(_, c):
+            d = jnp.sum(jnp.abs(G - delta(c)) * wmask, axis=(0, 2, 3))   # [nh]
+            return None, d.reshape(nkv, q_group).sum(-1)                 # [nkv]
+
+        _, dist = jax.lax.scan(cand, None, jnp.arange(C))                # [C,nkv]
+        dist = jnp.where(selected.T, jnp.inf, dist)
+        j_star = jnp.argmin(dist, axis=0).astype(jnp.int32)              # [nkv]
+        # subtract the newly-selected chunk's delta per kv head
+        take_h = lambda t, idx: jnp.take_along_axis(                      # per-head gather
+            t, idx[None, None, :, None, None], axis=3)[..., 0, :]
+        idx_q = jnp.repeat(j_star, q_group)                               # [nh]
+        idx_k = j_star                                                    # [nkv]
+        d_sel = (_pair_scores(take_h(qch_rot, idx_q), take_h(kch_rot, idx_k), q_group)
+                 - _pair_scores(take_h(qch, idx_q), take_h(kch, idx_k), q_group))
+        G = G - d_sel
+        selected = selected.at[jnp.arange(nkv), j_star].set(True)
+        order = order.at[:, i].set(j_star)
+        return (G, selected, order), None
+
+    (G, selected, order), _ = jax.lax.scan(
+        iteration, (G, selected, order), jnp.arange(r))
+    return order
+
+
+# ---------------------------------------------------------------------------
+# baseline selection methods (paper §4.3.1)
+# ---------------------------------------------------------------------------
+
+def uniform_selection(C: int, r: int, nkv: int) -> jnp.ndarray:
+    """Evenly spaced chunks across the frequency range, same for all heads."""
+    idx = np.unique(np.round(np.linspace(0, C - 1, r)).astype(np.int32))
+    while len(idx) < r:  # de-dup fallback for tiny C
+        extra = [i for i in range(C) if i not in idx][: r - len(idx)]
+        idx = np.sort(np.concatenate([idx, np.array(extra, np.int32)]))
+    return jnp.tile(jnp.asarray(idx, jnp.int32)[None], (nkv, 1))
+
+
+def contribution_selection(q, k, q_group: int, r: int) -> jnp.ndarray:
+    """Hong et al. style: rank chunks by L2 contribution ‖q_c‖·‖k_c‖ per head."""
+    qch, kch = _chunked(q), _chunked(k)                      # [B,S,H,C,2]
+    qn = jnp.sqrt(jnp.mean(jnp.sum(qch.astype(jnp.float32) ** 2, -1), (0, 1)))  # [nh,C]
+    kn = jnp.sqrt(jnp.mean(jnp.sum(kch.astype(jnp.float32) ** 2, -1), (0, 1)))  # [nkv,C]
+    nkv = kn.shape[0]
+    contrib = qn.reshape(nkv, q_group, -1).sum(1) * kn                  # [nkv,C]
+    _, idx = jax.lax.top_k(contrib, r)
+    return idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# whole-model search
+# ---------------------------------------------------------------------------
+
+def _layer_qk(layer_params, cfg, x):
+    """Projections for one attention layer from captured normed input x."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, layer_params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", x, layer_params["wk"].astype(dt))
+    return q, k
+
+
+def search_model(params, buffers, cfg, batch, r: int, method: str = "greedy",
+                 moe_impl: str = "dense", causal: bool = True
+                 ) -> Dict[int, jnp.ndarray]:
+    """Elite chunks for every attention layer of a *baseline* (non-elite) model.
+
+    Returns {absolute_layer_index: [n_kv, r] int32} (greedy order preserved).
+    """
+    from repro.models import lm
+    assert not cfg.elitekv.enabled, "search runs on the baseline model"
+    caps = lm.capture_attn_inputs(params, buffers, cfg, batch, moe_impl=moe_impl)
+    P_ = cfg.block_period
+    out: Dict[int, jnp.ndarray] = {}
+    positions = None
+    for p_key, xs in caps.items():
+        p_pos = int(p_key[1:])
+        n_super = xs.shape[0]
+        for s in range(n_super):
+            layer_idx = s * P_ + p_pos
+            lp = jax.tree.map(lambda t: t[s], params["blocks"][p_key]["attn"])
+            x = xs[s]
+            if positions is None or positions.shape[0] != x.shape[1]:
+                positions = jnp.arange(x.shape[1])
+            q, k = _layer_qk(lp, cfg, x)
+            if method == "greedy":
+                out[layer_idx] = greedy_search_layer(
+                    q, k, positions, cfg.rope_theta, cfg.q_group, r, causal)
+            elif method == "uniform":
+                out[layer_idx] = uniform_selection(cfg.head_dim // 2, r, cfg.n_kv_heads)
+            elif method == "contribution":
+                out[layer_idx] = contribution_selection(q, k, cfg.q_group, r)
+            else:
+                raise ValueError(method)
+    return out
+
+
+def score_distance(q, k, positions, theta, q_group, elite_idx, causal=True) -> jnp.ndarray:
+    """‖s(full) − s(elite set)‖₁ — diagnostic used by tests/benchmarks."""
+    dh = q.shape[-1]
+    C = dh // 2
+    nkv, r = elite_idx.shape
+    mask_kv = jnp.zeros((nkv, C), bool).at[
+        jnp.arange(nkv)[:, None], elite_idx].set(True)
+    mask_q = jnp.repeat(mask_kv, q_group, axis=0)
+    q_sub = rope_lib.apply_rope_subset(q, positions, theta, mask_q)
+    k_sub = rope_lib.apply_rope_subset(k, positions, theta, mask_kv)
+    q_rot = rope_lib.apply_rope(q, positions, theta)
+    k_rot = rope_lib.apply_rope(k, positions, theta)
+
+    def scores(qq, kk):
+        kk = jnp.repeat(kk, q_group, axis=2) if q_group > 1 else kk
+        return jnp.einsum("bqhd,bkhd->bhqk", qq, kk,
+                          preferred_element_type=jnp.float32)
+
+    s_full = scores(q_rot, k_rot)
+    s_sub = scores(q_sub, k_sub)
+    S = q.shape[1]
+    w = (jnp.tril(jnp.ones((S, S))) if causal else jnp.ones((S, S)))[None, None]
+    return jnp.sum(jnp.abs(s_full - s_sub) * w, axis=(0, 2, 3))

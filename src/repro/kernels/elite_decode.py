@@ -1,0 +1,126 @@
+"""Fused EliteKV decode-attention Pallas kernel (the paper's serving hot-spot).
+
+One pass over the *compressed* cache computes, per (batch, kv-head):
+
+    s   = q_e · K_eᵀ + q_lat · C_kᵀ          (rotary-elite + latent scores)
+    p   = online_softmax(s · scale)           (masked by per-sequence length)
+    o   = p · C_v                             (latent output)
+
+Decode attention is HBM-bandwidth-bound: the roofline is "read the cache
+once".  Because this kernel reads only the 2r·n_kv + d_ckv compressed stream
+(vs 2·d_h·n_kv uncompressed) its bandwidth roofline improves by exactly the
+paper's compression ratio — and fusing both score paths means the latent C is
+read once and serves s_lat *and* the output GEMM.
+
+VMEM tiling: grid (B, n_kv, S/block_s); per step the working set is
+  K_e block [block_s, 2r]  +  C_k/C_v blocks [block_s, d_c]
+  + accumulators [G, d_c], [G, 1] ×2         (scratch, persists over S steps)
+block_s=512, d_c=512, bf16 → ~1.1 MB ≪ 16 MB VMEM.  d_c and block_s are
+128-multiples (MXU-aligned); the 2r rotary GEMM rides lane padding (≤64).
+Per-sequence lengths arrive via scalar prefetch (ragged serving batches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(lengths_ref,                  # scalar-prefetch [B] int32
+            q_e_ref, q_lat_ref, k_e_ref, c_k_ref, c_v_ref,
+            o_ref,
+            acc_ref, m_ref, l_ref,
+            *, block_s: int, scale: float, n_blocks: int):
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    start = sb * block_s
+
+    @pl.when(start < length)
+    def _step():
+        q_e = q_e_ref[0, 0]                           # [G, 2r]
+        q_lat = q_lat_ref[0, 0]                       # [G, d_c]
+        k_e = k_e_ref[0, :, 0, :]                     # [block_s, 2r]
+        c_k = c_k_ref[0]                              # [block_s, d_c]
+        s = jax.lax.dot_general(
+            q_e, k_e, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [G, block_s]
+        s += jax.lax.dot_general(
+            q_lat, c_k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s *= scale
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(c_v_ref.dtype), c_v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [G, d_c]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(sb == n_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def elite_decode(q_e, q_lat, k_e, c_k, c_v, lengths, q_group: int,
+                 scale: float, block_s: int = 512, interpret: bool = False):
+    """See kernels/ref.py::elite_decode_ref for exact semantics.
+
+    q_e [B,nh,2r], q_lat [B,nh,d_c], k_e [B,S,nkv,2r], c_k/c_v [B,S,d_c],
+    lengths [B] int32  →  o [B,nh,d_c]
+    """
+    B, nh, r2 = q_e.shape
+    S, nkv = k_e.shape[1], k_e.shape[2]
+    d_c = c_k.shape[-1]
+    G = q_group
+    assert nh == nkv * G, (nh, nkv, G)
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    n_blocks = S // block_s
+
+    q_e_g = q_e.reshape(B, nkv, G, r2)
+    q_lat_g = q_lat.reshape(B, nkv, G, d_c)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, scale=scale, n_blocks=n_blocks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, nkv, n_blocks),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, r2), lambda b, h, s, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, d_c), lambda b, h, s, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_s, 1, r2), lambda b, h, s, L: (b, s, h, 0)),
+                pl.BlockSpec((1, block_s, d_c), lambda b, h, s, L: (b, s, 0)),
+                pl.BlockSpec((1, block_s, d_c), lambda b, h, s, L: (b, s, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, d_c), lambda b, h, s, L: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, d_c), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nkv, G, d_c), c_v.dtype),
+        interpret=interpret,
+        name="elite_decode",
+    )(lengths, q_e_g, q_lat_g, k_e, c_k, c_v)
+    return out.reshape(B, nh, d_c)

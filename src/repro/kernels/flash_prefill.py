@@ -1,0 +1,100 @@
+"""Causal flash-attention Pallas kernel (prefill / training forward).
+
+Standard online-softmax tiling (FlashAttention adapted to TPU VMEM/MXU):
+grid (B, n_heads, S/block_q, S/block_k), sequential over the kv axis with
+fp32 accumulators in VMEM scratch.  Causal block-skipping via ``pl.when`` —
+blocks strictly above the diagonal are never touched, halving HBM traffic.
+
+GQA is handled by mapping each q-head to its kv head in the BlockSpec index
+map (no materialized K/V repeat — the repeat would multiply HBM reads by the
+group size).
+
+Used at prefill for EliteKV models *after* the latent up-projection
+materializes K = [K_e | c·bk] and V = c·bv for the current chunk; training
+uses the same kernel via the materialized path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, block_q: int, block_k: int, scale: float, n_kb: int):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal skip: kv block strictly above the diagonal
+    @pl.when(jk * block_k <= iq * block_q + block_q - 1)
+    def _step():
+        q = q_ref[0, :, 0, :]                                # [bq, dh]
+        k = k_ref[0, :, 0, :]                                # [bk, dh]
+        v = v_ref[0, :, 0, :]                                # [bk, dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = jk * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jk == n_kb - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_prefill(q, k, v, q_group: int, scale: float,
+                  block_q: int = 256, block_k: int = 512,
+                  interpret: bool = False):
+    """Causal attention.  q [B,S,nh,dh], k/v [B,S,nkv,dh] → [B,S,nh,dh]."""
+    B, S, nh, dh = q.shape
+    nkv = k.shape[2]
+    assert nh == nkv * q_group
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    n_qb, n_kb = S // block_q, S // block_k
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                          scale=scale, n_kb=n_kb),
+        grid=(B, nh, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, dh), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda b, h, i, j, g=q_group: (b, j, h // g, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda b, h, i, j, g=q_group: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, dh), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, nh, dh), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_prefill",
+    )(q, k, v)
+    return out

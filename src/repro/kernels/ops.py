@@ -1,0 +1,40 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute via ``interpret=True`` — the
+kernel body runs in Python per grid step, numerically identical to the TPU
+lowering.  On TPU backends they compile through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import elite_decode as _ed
+from repro.kernels import flash_prefill as _fp
+from repro.kernels import rope_elite as _re
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("q_group", "scale", "block_s"))
+def elite_decode(q_e, q_lat, k_e, c_k, c_v, lengths, q_group: int,
+                 scale: float, block_s: int = 512):
+    return _ed.elite_decode(q_e, q_lat, k_e, c_k, c_v, lengths, q_group,
+                            scale, block_s=block_s, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("q_group", "scale", "block_q", "block_k"))
+def flash_prefill(q, k, v, q_group: int, scale: float,
+                  block_q: int = 256, block_k: int = 512):
+    return _fp.flash_prefill(q, k, v, q_group, scale, block_q=block_q,
+                             block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def rope_elite(x, positions, freqs, block_s: int = 1024):
+    return _re.rope_elite(x, positions, freqs, block_s=block_s,
+                          interpret=_interpret())

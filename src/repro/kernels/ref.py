@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def elite_decode_ref(q_e, q_lat, k_e, c_k, c_v, lengths, q_group: int,
+                     scale: float) -> jnp.ndarray:
+    """Absorbed EliteKV decode attention.
+
+    q_e   [B, nh, 2r]   rotated elite query
+    q_lat [B, nh, dc]   bk-absorbed non-elite query
+    k_e   [B, S, nkv, 2r]  rotated elite key cache
+    c_k   [B, S, dc]    latent cache (K side)
+    c_v   [B, S, dc]    latent cache (V side; same array under J-LRD)
+    lengths [B] int32   valid cache length per sequence
+    →     [B, nh, dc]   latent attention output (pre bv/wo absorption)
+    """
+    B, nh, r2 = q_e.shape
+    nkv = k_e.shape[2]
+    S = k_e.shape[1]
+    qe_g = q_e.reshape(B, nkv, q_group, r2)
+    s_e = jnp.einsum("bhge,bkhe->bhgk", qe_g, k_e, preferred_element_type=jnp.float32)
+    s_e = s_e.reshape(B, nh, S)
+    s_lat = jnp.einsum("bhc,bkc->bhk", q_lat, c_k, preferred_element_type=jnp.float32)
+    s = (s_e + s_lat) * scale
+    valid = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkc->bhc", p.astype(c_v.dtype), c_v)
+
+
+def flash_prefill_ref(q, k, v, q_group: int, scale: float) -> jnp.ndarray:
+    """Causal attention oracle.  q [B,S,nh,dh], k/v [B,S,nkv,dh] → [B,S,nh,dh]."""
+    B, S, nh, dh = q.shape
+    nkv = k.shape[2]
+    qg = q.reshape(B, S, nkv, q_group, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, S, nh, dh)
+
+
+def rope_elite_ref(x, positions, freqs) -> jnp.ndarray:
+    """Per-head rotary on packed elite dims.
+
+    x [B,S,H,2r], positions [S], freqs [H,r] → rotated x.
+    """
+    from repro.core.rope import apply_elite_rope
+    return apply_elite_rope(x, positions, freqs)

@@ -1,0 +1,56 @@
+"""Per-head elite-RoPE Pallas kernel.
+
+Rotates the packed elite dims of q/k with *per-head* frequency tables
+(RoPElite permutes each head's elite chunks to the front, so the rotation is
+a dense elementwise op on [S, 2r] — no gathers at runtime; the gather was
+baked into the projection weights at conversion).
+
+Grid (B, H); per step: x block [S_blk, 2r] + the head's freq row [1, r].
+Pure VPU work fused into one pass (cos/sin computed in-kernel from positions
+— no HBM-resident cos/sin tables).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, pos_ref, freq_ref, o_ref):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)         # [Sb, 2r]
+    pos = pos_ref[...].astype(jnp.float32)            # [Sb, 1]
+    f = freq_ref[0]                                   # [r]
+    ang = pos * f                                     # [Sb, r]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    Sb, r2 = x.shape
+    xe = x.reshape(Sb, r2 // 2, 2)
+    even, odd = xe[..., 0], xe[..., 1]
+    out = jnp.stack([even * cos - odd * sin, even * sin + odd * cos], axis=-1)
+    o_ref[0, :, 0, :] = out.reshape(Sb, r2).astype(o_ref.dtype)
+
+
+def rope_elite(x, positions, freqs, block_s: int = 1024, interpret: bool = False):
+    """x [B,S,H,2r], positions [S] int32, freqs [H,r] → rotated x."""
+    B, S, H, r2 = x.shape
+    r = r2 // 2
+    assert freqs.shape == (H, r)
+    block_s = min(block_s, S)
+    assert S % block_s == 0
+    pos2d = positions.reshape(S, 1).astype(jnp.float32)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, H, S // block_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s, 1, r2), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((block_s, 1), lambda b, h, s: (s, 0)),
+            pl.BlockSpec((1, r), lambda b, h, s: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, 1, r2), lambda b, h, s: (b, s, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+        name="rope_elite",
+    )(x, pos2d, freqs)

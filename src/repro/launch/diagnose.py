@@ -1,0 +1,88 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Dry-run profiler: top live buffers + per-collective breakdown for a cell.
+
+The "profile" available without hardware is the partitioned HLO — this tool
+is the lens the §Perf hypothesis loop looks through.
+
+  python -m repro.launch.diagnose --arch tinyllama_1_1b --shape train_4k
+"""
+import argparse
+import re
+from collections import Counter
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-elitekv", action="store_true")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--scan", action="store_true", help="use scan lowering")
+    ap.add_argument("--param-dtype", default="float32")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    from repro.launch import dryrun
+    res, compiled, cfg = dryrun.lower_cell(
+        args.arch, args.shape, args.multi_pod, elitekv=not args.no_elitekv,
+        seq_parallel=not args.no_seq_parallel, unroll=True,
+        param_dtype=args.param_dtype, return_artifacts=True)
+    txt = compiled.as_text()
+
+    print(f"peak/device: {res['memory']['peak_estimate_bytes']/2**30:.2f} GiB  "
+          f"(temp {res['memory']['temp_bytes']/2**30:.2f}, "
+          f"args {res['memory']['argument_bytes']/2**30:.2f})")
+    print(f"flops/device: {res['flops_per_device']:.3e}   "
+          f"bytes/device: {res['bytes_accessed_per_device']:.3e}")
+    print(f"collectives/device: {res['collective_bytes_per_device']/2**30:.2f} GiB")
+    for k, v in sorted(res["collectives"].items()):
+        print(f"  {k:20s} n={v['count']:4d}  {v['bytes']/2**30:7.2f} GiB")
+
+    # biggest single collectives
+    print("\n== largest collectives ==")
+    rows = []
+    for line in txt.splitlines():
+        m = dryrun._COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        nbytes = 0
+        for sm in dryrun._SHAPE_RE.finditer(m.group(1)):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in dryrun._DTYPE_BYTES:
+                continue
+            n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims else 1
+            nbytes += n * dryrun._DTYPE_BYTES[dt]
+        meta = re.search(r'op_name="([^"]*)"', line)
+        rows.append((nbytes, m.group(2), m.group(1)[:60],
+                     (meta.group(1)[-80:] if meta else "")))
+    rows.sort(reverse=True)
+    agg = Counter()
+    names = {}
+    for nbytes, op, shp, name in rows:
+        key = (op, shp)
+        agg[key] += nbytes
+        names.setdefault(key, name)
+    for (op, shp), b in agg.most_common(args.top):
+        print(f"  {b/2**30:7.2f} GiB  {op:18s} {shp}")
+        print(f"           └─ {names[(op, shp)]}")
+
+    # biggest shapes overall
+    print("\n== largest tensor shapes in HLO ==")
+    sizes = Counter()
+    counts = Counter()
+    for m in re.finditer(r"(f32|bf16|s32|u32|f16|s8|u8|pred)\[([\d,]+)\]", txt):
+        dims = [int(x) for x in m.group(2).split(",")]
+        b = int(np.prod(dims)) * dryrun._DTYPE_BYTES[m.group(1)]
+        key = f"{m.group(1)}[{m.group(2)}]"
+        sizes[key] = b
+        counts[key] += 1
+    for k, v in sorted(sizes.items(), key=lambda kv: -kv[1])[:args.top]:
+        print(f"  {v/2**30:7.2f} GiB  ×{counts[k]:4d}  {k}")
+
+
+if __name__ == "__main__":
+    main()

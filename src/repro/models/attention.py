@@ -1,0 +1,148 @@
+"""Baseline GQA/MHA attention with full RoPE (the paper's starting point).
+
+Three entry modes:
+  * ``full``   — training / whole-sequence forward (causal).
+  * ``prefill``— same math, but also writes the KV cache.
+  * ``decode`` — one token per call against the cache.
+
+Sharding-friendliness notes (GSPMD):
+  * GQA is computed by *repeating* K/V to the query-head count — an explicit
+    gather GSPMD shards cleanly on the head axis (reshape-to-groups einsums
+    make GSPMD reshard when TP > n_kv, which covers most assigned archs).
+  * Long sequences use *q-chunked* attention (``lax.scan`` over query blocks,
+    exact row softmax) so the [S,S] score matrix never materializes — the
+    XLA-level analogue of the Pallas flash kernel in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rope as rope_lib
+
+NEG_INF = -1e30
+
+
+def init(key, cfg) -> Dict[str, Any]:
+    d, dh, nh, nkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    from repro.models.layers import dense_init
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d, nh, dh)),
+        "wk": dense_init(kk, (d, nkv, dh)),
+        "wv": dense_init(kv, (d, nkv, dh)),
+        "wo": dense_init(ko, (nh, dh, d), in_axis=2, scale=(nh * dh) ** -0.5),
+    }
+
+
+def _auto_chunk(Sq: int, chunk_q) -> Optional[int]:
+    if chunk_q is not None:
+        return chunk_q if Sq > chunk_q and Sq % chunk_q == 0 else None
+    if Sq >= 4096 and Sq % 1024 == 0:
+        return 1024
+    return None
+
+
+_NOOP = lambda name, x: x
+
+
+def _attend(q, k, v, q_group: int, scale: float, *, q_offset=0,
+            chunk_q: Optional[int] = None, constrain=_NOOP,
+            unroll: bool = False) -> jnp.ndarray:
+    """Causal attention.  q [B,Sq,nh,dh]; k,v [B,Sk,nkv,dh]; mask:
+    key j visible to query i iff  j <= i + q_offset  (decode: Sq=1,
+    q_offset=index).  Returns [B,Sq,nh,dh]."""
+    B, Sq, nh, dh = q.shape
+    Sk = k.shape[1]
+    if q_group > 1:
+        k = constrain("heads4", jnp.repeat(k, q_group, axis=2))
+        v = constrain("heads4", jnp.repeat(v, q_group, axis=2))
+    kpos = jnp.arange(Sk)[None, :]
+
+    def block(qc, start):
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = (start + jnp.arange(qc.shape[1]))[:, None]
+        s = jnp.where(kpos <= qpos + q_offset, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+    cq = _auto_chunk(Sq, chunk_q)
+    if cq is None:
+        return block(q, 0)
+    n = Sq // cq
+    if unroll:  # accurate HLO flop accounting for the dry-run (no while loop)
+        outs = [block(q[:, i * cq:(i + 1) * cq], i * cq) for i in range(n)]
+        return jnp.concatenate(outs, axis=1)
+    qs = jnp.moveaxis(q.reshape(B, n, cq, nh, dh), 1, 0)      # [n,B,cq,nh,dh]
+
+    def step(_, xs):
+        qc, i = xs
+        return None, block(qc, i * cq)
+
+    # remat each chunk: without it the backward saves the stacked per-chunk
+    # probabilities ([n, B, h, cq, S] — tens of GiB at 4k/32k); with it only
+    # the chunk outputs persist and scores are recomputed in the backward
+    # (exactly the flash-attention backward trade).
+    _, os = jax.lax.scan(jax.checkpoint(step), None, (qs, jnp.arange(n)))
+    return jnp.moveaxis(os, 0, 1).reshape(B, Sq, nh, dh)
+
+
+def causal_mask(Sq: int, Sk: int, offset: int = 0, dtype=jnp.float32):
+    """Additive causal mask (kept for reference paths/tests)."""
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Sk)[None, :]
+    return jnp.where(kj <= qi + offset, 0.0, NEG_INF).astype(dtype)
+
+
+def _qkv(params, cfg, x, positions, constrain=_NOOP):
+    dt = x.dtype
+    q = constrain("attn_q", jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(dt)))
+    k = constrain("attn_kv", jnp.einsum("bsd,dhe->bshe", x, params["wk"].astype(dt)))
+    v = constrain("attn_kv", jnp.einsum("bsd,dhe->bshe", x, params["wv"].astype(dt)))
+    q = constrain("attn_q", rope_lib.apply_rope(q, positions, cfg.rope_theta))
+    k = constrain("attn_kv", rope_lib.apply_rope(k, positions, cfg.rope_theta))
+    return q, k, v
+
+
+def apply_full(params, cfg, x, positions, constrain=_NOOP) -> jnp.ndarray:
+    q, k, v = _qkv(params, cfg, x, positions, constrain)
+    o = _attend(q, k, v, cfg.q_group, cfg.head_dim ** -0.5,
+                chunk_q=cfg.attn_chunk_q, constrain=constrain,
+                unroll=cfg.attn_chunk_unroll)
+    return jnp.einsum("bshe,hed->bsd", o, params["wo"].astype(x.dtype))
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    nkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, nkv, dh), dtype),
+        "v": jnp.zeros((batch, max_len, nkv, dh), dtype),
+    }
+
+
+def apply_prefill(params, cfg, x, positions, cache, constrain=_NOOP) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    q, k, v = _qkv(params, cfg, x, positions, constrain)
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+    o = _attend(q, k, v, cfg.q_group, cfg.head_dim ** -0.5,
+                chunk_q=cfg.attn_chunk_q, constrain=constrain,
+                unroll=cfg.attn_chunk_unroll)
+    return jnp.einsum("bshe,hed->bsd", o, params["wo"].astype(x.dtype)), new_cache
+
+
+def apply_decode(params, cfg, x, index, cache, constrain=_NOOP) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """x: [B, 1, d]; index: scalar position of the new token."""
+    dt = x.dtype
+    pos = jnp.full((x.shape[0], 1), index, jnp.int32)
+    q, k, v = _qkv(params, cfg, x, pos, constrain)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, index, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, index, 0, 0))
+    o = _attend(q, ck.astype(dt), cv.astype(dt), cfg.q_group,
+                cfg.head_dim ** -0.5, q_offset=index, constrain=constrain)
+    out = jnp.einsum("bshe,hed->bsd", o, params["wo"].astype(dt))
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,66 @@
+"""Shared layers: RMSNorm, SwiGLU MLP, embeddings, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, scale: float | None = None, in_axis: int = 0):
+    """Truncated-normal fan-in init (LLaMA-style)."""
+    fan_in = shape[in_axis]
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * scale)
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dt)
+
+
+def mlp_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff)),
+        "w_up": dense_init(k2, (d_model, d_ff)),
+        "w_down": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def mlp(params, x, constrain=lambda n, t: t):
+    """SwiGLU feed-forward."""
+    h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype)) * (x @ params["w_up"].astype(x.dtype))
+    h = constrain("mlp_h", h)
+    return h @ params["w_down"].astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d_model: int):
+    return {"table": dense_init(key, (vocab, d_model), scale=0.02)}
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x):
+    """Tied or untied LM head: x @ table^T, logits in fp32."""
+    return (x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token CE, fp32.  logits [B,S,V], labels [B,S]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

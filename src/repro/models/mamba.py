@@ -1,0 +1,174 @@
+"""Mamba-1 block (selective SSM) — falcon-mamba / jamba substrate.
+
+TPU adaptation: the CUDA selective-scan kernel is replaced by a *chunked*
+associative scan — ``lax.scan`` over sequence chunks with a parallel
+``lax.associative_scan`` inside each chunk, bounding live memory to
+``B × chunk × d_inner × d_state`` while keeping the scan depth ``S / chunk``.
+Decode is the O(1) recurrent step over (conv_state, ssm_state) — no KV cache
+exists, which is exactly why EliteKV is inapplicable here (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.dt_rank or -(-cfg.d_model // 16)
+
+
+def init(key, cfg) -> Dict[str, Any]:
+    d, di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias ~ softplus^-1(dt) with dt in [1e-3, 1e-1]
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    u = jax.random.uniform(ks[5], (di,), jnp.float32)
+    dt_init = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))        # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": dense_init(ks[1], (K, di), scale=K ** -0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * N)),
+        "dt_w": dense_init(ks[3], (dtr, di), scale=dtr ** -0.5),
+        "dt_b": dt_bias,
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d)),
+    }
+
+
+def _conv_causal(xs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d.  xs [B,S,di], w [K,di]."""
+    K = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    # unrolled taps (K is 4): avoids conv lowering quirks, stays MXU-free (VPU)
+    out = jnp.zeros_like(xs)
+    for t in range(K):
+        out = out + pad[:, t:t + xs.shape[1], :] * w[t][None, None, :]
+    return out + b.astype(xs.dtype)[None, None, :]
+
+
+def _ssm_params(params, cfg, xs):
+    """Per-token Δ, B, C from the conv output.  xs [B,S,di] (post-silu)."""
+    dt_ = xs.dtype
+    dtr = _dt_rank(cfg)
+    N = cfg.ssm_state
+    proj = xs @ params["x_proj"].astype(dt_)                  # [B,S,dtr+2N]
+    dt_low, Bm, Cm = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt_low @ params["dt_w"].astype(dt_) + params["dt_b"].astype(dt_))
+    A = -jnp.exp(params["A_log"])                             # [di,N] fp32
+    return dt, Bm, Cm, A
+
+
+def _chunk_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def ssm_scan(dt, xs, Bm, Cm, A, D, h0=None, chunk: int = 128,
+             unroll: bool = False):
+    """Selective scan.  Shapes: dt,xs [B,S,di]; Bm,Cm [B,S,N]; A [di,N].
+
+    Returns y [B,S,di] and final state h [B,di,N] (fp32).
+    """
+    B, S, di = xs.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    n_pad = (-S) % chunk
+    if n_pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, n_pad)) + ((0, 0),) * (t.ndim - 2))
+        dt, xs, Bm, Cm = z(dt), z(xs), z(Bm), z(Cm)
+    Sp = S + n_pad
+    nc = Sp // chunk
+    resh = lambda t: t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    dt_c, xs_c, Bm_c, Cm_c = resh(dt), resh(xs), resh(Bm), resh(Cm)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+
+    def step(h_in, inp):
+        dtk, xk, Bk, Ck = inp                                  # [B,chunk,...]
+        dtk32 = dtk.astype(jnp.float32)
+        dA = jnp.exp(dtk32[..., None] * A[None, None])         # [B,ck,di,N]
+        dBx = (dtk32 * xk.astype(jnp.float32))[..., None] * Bk.astype(jnp.float32)[:, :, None, :]
+        aprod, bacc = jax.lax.associative_scan(_chunk_combine, (dA, dBx), axis=1)
+        h_ts = aprod * h_in[:, None] + bacc                    # [B,ck,di,N]
+        y = jnp.einsum("bsdn,bsn->bsd", h_ts, Ck.astype(jnp.float32))
+        y = y + D[None, None] * xk.astype(jnp.float32)
+        return h_ts[:, -1], y.astype(xs.dtype)
+
+    if unroll:  # accurate HLO flop accounting for the dry-run
+        h, outs = h0, []
+        for i in range(nc):
+            h, y = step(h, (dt_c[i], xs_c[i], Bm_c[i], Cm_c[i]))
+            outs.append(y)
+        return jnp.concatenate(outs, axis=1)[:, :S], h
+    # remat each chunk: without it the backward saves the [B,chunk,di,N]
+    # state-expanded intermediates of EVERY chunk (~ S*di*N*4 bytes -- 100s of
+    # GiB at 4k x 8192 x 16); with it only the [B,di,N] carry chain persists.
+    h_fin, ys = jax.lax.scan(jax.checkpoint(step), h0, (dt_c, xs_c, Bm_c, Cm_c))
+    y = ys.swapaxes(0, 1).reshape(B, Sp, di)[:, :S]
+    return y, h_fin
+
+
+def apply_full(params, cfg, x, return_state: bool = False, constrain=lambda n, t: t):
+    """x [B,S,d] → y [B,S,d]  (optionally + (conv_state, ssm_state) for prefill)."""
+    dt_ = x.dtype
+    di = cfg.d_inner
+    xz = x @ params["in_proj"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, z = constrain("ssm_h", xs), constrain("ssm_h", z)
+    xs_conv = _conv_causal(xs, params["conv_w"].astype(dt_), params["conv_b"])
+    xs_act = jax.nn.silu(xs_conv)
+    dt, Bm, Cm, A = _ssm_params(params, cfg, xs_act)
+    y, h_fin = ssm_scan(dt, xs_act, Bm, Cm, A, params["D"],
+                        chunk=cfg.ssm_chunk, unroll=cfg.ssm_unroll)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dt_)
+    if return_state:
+        K = cfg.ssm_conv
+        conv_state = xs[:, -(K - 1):, :] if K > 1 else jnp.zeros((x.shape[0], 0, di), dt_)
+        return out, (conv_state, h_fin)
+    return out
+
+
+def init_state(cfg, batch: int, dtype=jnp.bfloat16):
+    K, di, N = cfg.ssm_conv, cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, K - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, N), jnp.float32),
+    }
+
+
+def apply_decode(params, cfg, x, state, constrain=lambda n, t: t) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One-token recurrent step.  x [B,1,d]."""
+    dt_ = x.dtype
+    K = cfg.ssm_conv
+    xz = x @ params["in_proj"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)                         # [B,1,di]
+    xs, z = constrain("ssm_h", xs), constrain("ssm_h", z)
+    window = jnp.concatenate([state["conv"].astype(dt_), xs], axis=1)  # [B,K,di]
+    w = params["conv_w"].astype(dt_)
+    xc = jnp.einsum("bkd,kd->bd", window, w) + params["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)[:, None, :]                          # [B,1,di]
+    dt, Bm, Cm, A = _ssm_params(params, cfg, xc)
+    dt32 = dt[:, 0].astype(jnp.float32)                       # [B,di]
+    dA = jnp.exp(dt32[..., None] * A[None])                   # [B,di,N]
+    dBx = (dt32 * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0].astype(jnp.float32)[:, None, :]
+    h = dA * state["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))
+    y = y + params["D"][None] * xc[:, 0].astype(jnp.float32)
+    y = (y.astype(dt_) * jax.nn.silu(z[:, 0]))[:, None, :]
+    out = y @ params["out_proj"].astype(dt_)
+    new_state = {"conv": window[:, 1:, :].astype(state["conv"].dtype), "ssm": h}
+    return out, new_state

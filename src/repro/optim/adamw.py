@@ -1,0 +1,128 @@
+"""AdamW with selectable moment precision — fp32 / bf16 / int8.
+
+The int8 path (block-quantized first and second moments with per-row scales,
+à la 8-bit Adam) is the distributed-optimization trick that makes the
+480B-parameter arctic config fit the v5e HBM budget: moments drop from
+8 bytes/param to ~2.03 bytes/param.  Moments are dequantized, updated, and
+requantized inside the (jitted, sharded) update — the quantization error acts
+as bounded noise on the moment estimates.
+
+All state mirrors the parameter sharding (ZeRO: the optimizer update is
+purely elementwise, so sharded params ⇒ sharded states, no extra collectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95          # paper §4.1 training setup
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"   # float32 | bfloat16 | int8
+    # §Perf: process big stacked leaves in slices of this many layers via
+    # lax.map — bounds the fp32 decode/update transients of the (possibly
+    # int8-quantized) moments to chunk/L of the leaf instead of 3-4 full
+    # fp32 copies of every parameter
+    update_chunk: int = 0           # 0 = whole-leaf update
+
+
+# --- int8 block quantization (per trailing-row absmax) ----------------------
+
+def _quant(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    ax = -1 if x.ndim else None
+    scale = jnp.max(jnp.abs(x), axis=ax, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def _dequant(qs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return qs["q"].astype(jnp.float32) * qs["s"]
+
+
+def _encode(x, dtype: str):
+    if dtype == "int8":
+        return _quant(x)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x.astype(jnp.float32)
+
+
+def _decode(x, dtype: str):
+    if dtype == "int8":
+        return _dequant(x)
+    return x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+
+def init(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: _encode(zeros(p), cfg.moment_dtype), params),
+        "v": jax.tree.map(lambda p: _encode(zeros(p), cfg.moment_dtype), params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state, params, lr, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    is_quant = cfg.moment_dtype == "int8"
+
+    def upd_one(p, g, m_enc, v_enc):
+        g = g.astype(jnp.float32)
+        m = _decode(m_enc, cfg.moment_dtype) * b1 + (1 - b1) * g
+        v = _decode(v_enc, cfg.moment_dtype) * b2 + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        newp = (p.astype(jnp.float32)
+                - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)))
+        return newp.astype(p.dtype), _encode(m, cfg.moment_dtype), _encode(v, cfg.moment_dtype)
+
+    def upd(p, g, m_enc, v_enc):
+        ck = cfg.update_chunk
+        if ck and p.ndim >= 3 and p.shape[0] > ck and p.shape[0] % ck == 0:
+            resh = lambda t: t.reshape((p.shape[0] // ck, ck) + t.shape[1:])
+            args = (resh(p), resh(g), jax.tree.map(resh, m_enc), jax.tree.map(resh, v_enc))
+            outs = jax.lax.map(lambda a: upd_one(*a), args)
+            unr = lambda t: t.reshape((p.shape[0],) + t.shape[2:])
+            return (unr(outs[0]), jax.tree.map(unr, outs[1]), jax.tree.map(unr, outs[2]))
+        return upd_one(p, g, m_enc, v_enc)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    if is_quant:
+        # m/v subtrees have {'q','s'} structure per param leaf
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+    else:
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm}

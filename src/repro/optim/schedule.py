@@ -1,0 +1,36 @@
+"""LR schedules: constant (paper's uptraining §4.1), cosine, and WSD
+(warmup-stable-decay — MiniCPM's schedule, since that arch is assigned)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(peak: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac * peak + (1 - floor_frac) * peak * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+    return fn
+
+
+def wsd(peak: float, warmup: int, stable: int, decay: int, floor_frac: float = 0.01):
+    """MiniCPM warmup-stable-decay: linear warmup → flat → exp-ish decay."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+        dec = peak * (floor_frac ** t)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < warmup + stable, peak, dec))
+        return out.astype(jnp.float32)
+    return fn
+
+
+def get(name: str, **kw):
+    return {"constant": constant, "cosine": cosine, "wsd": wsd}[name](**kw)

@@ -1,0 +1,29 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+Checkpoints store unsharded leaves (checkpoint/checkpointer.py), so scale-up /
+scale-down is: load → ``jax.device_put`` onto the new mesh's shardings →
+continue.  The data pipeline re-derives host slices from the new
+(host_id, num_hosts), and the deterministic (epoch, step) stream keeps the
+token order consistent across the resize.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+
+from repro.distributed import sharding as shd
+
+
+def reshard_state(params, opt_state, cfg, new_mesh, moment_dtype: str = "float32"):
+    """Re-place an (unsharded or differently-sharded) state on ``new_mesh``."""
+    plan = shd.plan_for_mesh(new_mesh)
+    pspecs = shd.param_pspecs(params, cfg, plan)
+    pshard = jax.tree.map(plan.named, pspecs,
+                          is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    new_params = jax.tree.map(jax.device_put, params, pshard)
+    ospecs = shd.opt_pspecs(opt_state, params, cfg, plan, moment_dtype)
+    oshard = jax.tree.map(plan.named, ospecs,
+                          is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    new_opt = jax.tree.map(jax.device_put, opt_state, oshard)
+    return new_params, new_opt, plan

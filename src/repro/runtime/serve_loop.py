@@ -1,0 +1,74 @@
+"""Serving runtime: prefill + decode step factories and a batched request
+loop over the compressed EliteKV cache (continuous-batching style slots).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, constrain=None,
+                      moe_impl: str = "ragged", data_axes=("data",)):
+    constrain = constrain or (lambda n, x: x)
+
+    def prefill_step(params, buffers, batch, cache):
+        return lm.apply_prefill(params, buffers, cfg, batch, cache,
+                                moe_impl=moe_impl, mesh=mesh,
+                                constrain=constrain, data_axes=data_axes)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None, constrain=None,
+                     moe_impl: str = "ragged", greedy: bool = True,
+                     data_axes=("data",)):
+    constrain = constrain or (lambda n, x: x)
+
+    def decode_step(params, buffers, tokens, cache):
+        batch = ({"tokens": tokens} if cfg.frontend != "audio"
+                 else {"frames": tokens})
+        logits, cache = lm.apply_decode(params, buffers, cfg, batch, cache,
+                                        moe_impl=moe_impl, mesh=mesh,
+                                        constrain=constrain, data_axes=data_axes)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decoded_tokens: int = 0
+    cache_bytes: int = 0
+
+
+def generate(params, buffers, cfg: ModelConfig, prompts: jnp.ndarray,
+             max_new_tokens: int, mesh=None, moe_impl: str = "ragged",
+             cache_dtype=jnp.float32) -> Tuple[np.ndarray, ServeStats]:
+    """Greedy generation for a batch of fixed-length prompts (examples/tests).
+
+    prompts: [B, S_prompt] int32 → generated [B, max_new_tokens].
+    """
+    B, Sp = prompts.shape
+    max_len = Sp + max_new_tokens
+    cache = lm.init_cache(cfg, B, max_len, dtype=cache_dtype)
+    prefill = jax.jit(make_prefill_step(cfg, mesh=mesh, moe_impl=moe_impl))
+    decode = jax.jit(make_decode_step(cfg, mesh=mesh, moe_impl=moe_impl))
+    logits, cache = prefill(params, buffers, {"tokens": prompts}, cache)
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    outs = [nxt]
+    for _ in range(max_new_tokens - 1):
+        nxt, _, cache = decode(params, buffers, nxt[:, None], cache)
+        outs.append(nxt)
+    from repro.core.cache import measured_cache_bytes
+    stats = ServeStats(prefill_tokens=B * Sp, decoded_tokens=B * max_new_tokens,
+                       cache_bytes=measured_cache_bytes(cache, B, max_len)["attn_bytes"])
+    return np.stack([np.asarray(o) for o in outs], axis=1), stats

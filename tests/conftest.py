@@ -1,0 +1,42 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override belongs to launch/dryrun.py only).  Multi-device
+sharding tests spawn subprocesses with their own env."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import EliteKVConfig
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """2-layer llama-like GQA config, fp32."""
+    return get_config("tinyllama_1_1b").reduced(num_layers=2, vocab_size=128)
+
+
+@pytest.fixture(scope="session")
+def tiny_elite_cfg(tiny_cfg):
+    return dataclasses.replace(
+        tiny_cfg, elitekv=EliteKVConfig(enabled=True, elite_r=4, d_ckv=64))
+
+
+@pytest.fixture(scope="session")
+def tiny_model(tiny_cfg, key):
+    from repro.models import lm
+    params, buffers = lm.init(key, tiny_cfg)
+    return params, buffers
+
+
+@pytest.fixture(scope="session")
+def tiny_elite_model(tiny_elite_cfg, key):
+    from repro.models import lm
+    params, buffers = lm.init(key, tiny_elite_cfg)
+    return params, buffers

@@ -1,0 +1,115 @@
+"""Conversion pipeline: surgery exactness, GQA pooling, dimension selection."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, make_inputs
+from repro.configs.base import EliteKVConfig
+from repro.core import convert, ropelite
+from repro.models import lm
+
+
+def test_exact_rank_matches_partial_rope_reference(tiny_cfg, tiny_model):
+    """Full-rank J-LRD conversion == baseline with RoPE restricted to the
+    elite sets (the only difference EliteKV should introduce pre-truncation)."""
+    params, buffers = tiny_model
+    cfg = tiny_cfg
+    batch = make_inputs(cfg, 2, 16, "train", seed=3)
+    sets = ropelite.search_model(params, buffers, cfg, batch, r=4)
+    full = cfg.n_kv_heads * (cfg.head_dim - 8) + cfg.n_kv_heads * cfg.head_dim
+    ek = EliteKVConfig(enabled=True, elite_r=4, d_ckv=min(full, cfg.d_model))
+    ep, eb, ecfg = convert.convert_model(params, buffers, cfg, sets, ek)
+
+    # reference model: monkey-patch rope to subset via masks
+    from repro.core import rope as rope_lib
+    from repro.models import attention as att
+    C = cfg.head_dim // 2
+
+    orig = rope_lib.apply_rope
+    masks = {}
+    for li, idx in sets.items():
+        m = np.zeros((cfg.n_kv_heads, C), bool)
+        for h in range(cfg.n_kv_heads):
+            m[h, np.asarray(idx[h])] = True
+        masks[li] = jnp.asarray(m)
+
+    # compute reference logits by manual per-layer forward with subset rope
+    def ref_logits():
+        h = params["embed"]["table"][batch["tokens"]].astype(cfg.dtype)
+        from repro.models.layers import mlp, rmsnorm, unembed
+        pos = jnp.arange(h.shape[1])
+        for li in range(cfg.num_layers):
+            p = jax.tree.map(lambda t: t[li], params["blocks"]["p0"])
+            hn = rmsnorm(p["attn_norm"], h, cfg.norm_eps)
+            dt = h.dtype
+            q = jnp.einsum("bsd,dhe->bshe", hn, p["attn"]["wq"].astype(dt))
+            k = jnp.einsum("bsd,dhe->bshe", hn, p["attn"]["wk"].astype(dt))
+            v = jnp.einsum("bsd,dhe->bshe", hn, p["attn"]["wv"].astype(dt))
+            mq = jnp.repeat(masks[li], cfg.q_group, axis=0)
+            q = rope_lib.apply_rope_subset(q, pos, cfg.rope_theta, mq)
+            k = rope_lib.apply_rope_subset(k, pos, cfg.rope_theta, masks[li])
+            o = att._attend(q, k, v, cfg.q_group, cfg.head_dim ** -0.5)
+            h = h + jnp.einsum("bshe,hed->bsd", o, p["attn"]["wo"].astype(dt))
+            hn = rmsnorm(p["ffn_norm"], h, cfg.norm_eps)
+            h = h + mlp(p["ffn"], hn)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return unembed(params["embed"], h) if cfg.tie_embeddings else \
+            h.astype(jnp.float32) @ params["lm_head"]["w"]
+
+    l_ref = ref_logits()
+    l_elite, _ = lm.apply_train(ep, eb, ecfg, batch)
+    V = cfg.vocab_size
+    np.testing.assert_allclose(np.asarray(l_elite[..., :V]),
+                               np.asarray(l_ref[..., :V]),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_gqa_pool_identity_when_groups_of_one(tiny_cfg, tiny_model):
+    params, _ = tiny_model
+    gp, gcfg = convert.to_gqa(params, tiny_cfg, tiny_cfg.n_kv_heads)
+    np.testing.assert_allclose(
+        np.asarray(gp["blocks"]["p0"]["attn"]["wk"]),
+        np.asarray(params["blocks"]["p0"]["attn"]["wk"]))
+
+
+def test_gqa_pool_reduces_and_runs(tiny_cfg, tiny_model):
+    params, buffers = tiny_model
+    gp, gcfg = convert.to_gqa(params, tiny_cfg, tiny_cfg.n_kv_heads // 2)
+    assert gcfg.n_kv_heads == tiny_cfg.n_kv_heads // 2
+    batch = make_inputs(gcfg, 2, 12, "train")
+    loss, _ = lm.loss_fn(gp, buffers, gcfg, batch)
+    assert jnp.isfinite(loss)
+
+
+@pytest.mark.parametrize("ratio", [0.5, 0.25, 0.125])
+def test_pick_dims_constraints(ratio):
+    for arch in ("yi_6b", "llama2_7b", "musicgen_large", "qwen3_moe_235b"):
+        cfg = get_config(arch)
+        ek = convert.pick_dims(cfg, ratio)
+        full = 2 * cfg.n_kv_heads * cfg.head_dim
+        got = ek.cache_per_token_per_layer(cfg.n_kv_heads, cfg.head_dim) / full
+        assert abs(got - ratio) < 0.13, (arch, got, ratio)
+        assert 2 * ek.elite_r < cfg.head_dim
+        # no-extra-parameter rule (paper App. C)
+        d, dh, nkv = cfg.d_model, cfg.head_dim, cfg.n_kv_heads
+        nope = nkv * (dh - 2 * ek.elite_r)
+        new = d * 2 * ek.elite_r * nkv + d * ek.d_ckv + ek.d_ckv * (nope + nkv * dh)
+        assert new <= d * dh * 2 * nkv
+
+
+def test_end_to_end_pipeline(tiny_cfg, tiny_model):
+    """search + convert + uptrain-one-step + decode — the paper's full flow."""
+    params, buffers = tiny_model
+    cfg = tiny_cfg
+    batch = make_inputs(cfg, 2, 16, "train", seed=1)
+    ek = EliteKVConfig(enabled=True, elite_r=4, d_ckv=48)
+    ep, eb, ecfg = convert.elitekv_from_baseline(params, buffers, cfg, batch, ek)
+    loss0, _ = lm.loss_fn(ep, eb, ecfg, batch)
+    assert jnp.isfinite(loss0)
+    g = jax.grad(lambda p: lm.loss_fn(p, eb, ecfg, batch)[0])(ep)
+    ep2 = jax.tree.map(lambda p, gg: p - 1e-3 * gg, ep, g)
+    loss1, _ = lm.loss_fn(ep2, eb, ecfg, batch)
+    assert float(loss1) < float(loss0)

@@ -1,0 +1,126 @@
+"""Sharding rules + multi-device numerics (subprocess with virtual devices —
+the main test process must keep seeing exactly 1 CPU device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.distributed import sharding as shd
+
+
+def test_main_process_single_device():
+    assert len(jax.devices()) == 1
+
+
+def test_pad_cfg_for_tp():
+    arctic = get_config("arctic_480b")
+    p = shd.pad_cfg_for_tp(arctic, 16)
+    assert p.n_heads == 64 and p.n_kv_heads == 8 and p.q_group == 8
+    assert p.head_dim == arctic.head_dim
+    mini = shd.pad_cfg_for_tp(get_config("minicpm_2b"), 16)
+    assert mini.n_heads % 16 == 0 and mini.q_group == 1
+    yi = shd.pad_cfg_for_tp(get_config("yi_6b"), 16)
+    assert yi.n_heads == 32  # already divisible → unchanged
+
+
+def test_param_specs_divisibility():
+    """Every sharded dim must divide its mesh axis (else GSPMD pads/errors)."""
+    from repro.models import lm
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16, "pod": 2}
+        axis_names = ("pod", "data", "model")
+
+    plan = shd.MeshPlan(mesh=FakeMesh(), dp_axes=("pod", "data"))
+    for arch in ("yi_6b", "qwen3_moe_235b", "jamba_v0_1_52b", "arctic_480b",
+                 "falcon_mamba_7b", "minicpm_2b", "musicgen_large"):
+        cfg = shd.pad_cfg_for_tp(get_config(arch), 16)
+        pshapes, _ = jax.eval_shape(lambda k: lm.init(k, cfg), jax.random.PRNGKey(0))
+        specs = shd.param_pspecs(pshapes, cfg, plan)
+
+        def check(path, leaf, spec):
+            for dim, s in zip(leaf.shape, tuple(spec)):
+                if s is None:
+                    continue
+                axes = s if isinstance(s, tuple) else (s,)
+                n = 1
+                for a in axes:
+                    n *= plan.mesh.shape[a]
+                assert dim % n == 0, (arch, path, leaf.shape, spec)
+
+        jax.tree_util.tree_map_with_path(
+            lambda p, l, s: check(p, l, s), pshapes, specs,
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, type(None)))
+
+
+def test_cell_applicability():
+    from repro.configs import cell_applicable
+    for arch, shape, expect in [
+        ("yi_6b", "long_500k", False),
+        ("falcon_mamba_7b", "long_500k", True),
+        ("jamba_v0_1_52b", "long_500k", True),
+        ("yi_6b", "train_4k", True),
+    ]:
+        ok, _ = cell_applicable(get_config(arch), SHAPES[shape])
+        assert ok == expect, (arch, shape)
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, dataclasses
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config, make_inputs
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import lm
+    from repro.runtime import train_loop
+
+    cfg = get_config("tinyllama_1_1b").reduced(num_layers=2, vocab_size=256,
+                                               n_heads=4, n_kv_heads=2)
+    key = jax.random.PRNGKey(0)
+    params, buffers = lm.init(key, cfg)
+    batch = make_inputs(cfg, 4, 32, "train", seed=0)
+
+    # single-device reference
+    loss_ref, _ = lm.loss_fn(params, buffers, cfg, batch)
+
+    mesh = make_debug_mesh((2, 4), ("data", "model"))
+    plan = shd.plan_for_mesh(mesh)
+    pspecs = shd.param_pspecs(params, cfg, plan)
+    P = jax.sharding.PartitionSpec
+    pshard = jax.tree.map(plan.named, pspecs, is_leaf=lambda x: isinstance(x, P))
+    params_s = jax.tree.map(jax.device_put, params, pshard)
+    constrain = shd.make_constrain(plan, cfg, 32, 4)
+    loss_sharded, _ = jax.jit(
+        lambda p, b: lm.loss_fn(p, buffers, cfg, b, constrain=constrain)
+    )(params_s, batch)
+
+    # sharded train step runs
+    tc = train_loop.TrainConfig(lr=1e-3)
+    step = train_loop.make_train_step(cfg, tc, mesh=mesh, constrain=constrain,
+                                      data_axes=plan.dp_axes)
+    opt = train_loop.init_opt_state(params_s, tc)
+    p2, o2, m = jax.jit(step)(params_s, buffers, opt, batch)
+    print(json.dumps({
+        "ref": float(loss_ref), "sharded": float(loss_sharded),
+        "train_loss": float(m["loss"]), "gnorm": float(m["grad_norm"]),
+    }))
+""")
+
+
+def test_sharded_loss_matches_single_device(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, cwd=os.getcwd(),
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["sharded"] == pytest.approx(res["ref"], rel=1e-4)
+    assert np.isfinite(res["train_loss"]) and np.isfinite(res["gnorm"])

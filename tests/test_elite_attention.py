@@ -1,0 +1,98 @@
+"""EliteKV attention invariants: absorbed decode ≡ materialized; cache stores
+post-rotation keys; prefill+decode ≡ full forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import make_inputs
+from repro.configs.base import EliteKVConfig
+from repro.models import lm
+
+
+def _roundtrip(cfg, params, buffers, batch, B, S, split, **kw):
+    logits_full, _ = lm.apply_train(params, buffers, cfg, batch, **kw)
+    cache = lm.init_cache(cfg, B, S, dtype=jnp.float32)
+    lp, cache = lm.apply_prefill(params, buffers, cfg,
+                                 {"tokens": batch["tokens"][:, :split]}, cache, **kw)
+    errs = [float(jnp.max(jnp.abs(lp - logits_full[:, :split])))]
+    for t in range(split, S):
+        ld, cache = lm.apply_decode(params, buffers, cfg,
+                                    {"tokens": batch["tokens"][:, t:t + 1]}, cache, **kw)
+        errs.append(float(jnp.max(jnp.abs(ld[:, 0] - logits_full[:, t]))))
+    return max(errs)
+
+
+def test_decode_equals_train_jlrd(tiny_elite_cfg, tiny_elite_model):
+    params, buffers = tiny_elite_model
+    B, S = 2, 20
+    batch = make_inputs(tiny_elite_cfg, B, S, "train", seed=5)
+    assert _roundtrip(tiny_elite_cfg, params, buffers, batch, B, S, 12) < 2e-5
+
+
+def test_decode_equals_train_slrd(tiny_cfg, key):
+    cfg = dataclasses.replace(
+        tiny_cfg, elitekv=EliteKVConfig(enabled=True, elite_r=4,
+                                        d_ck=32, d_cv=32, lrd="separate"))
+    params, buffers = lm.init(key, cfg)
+    B, S = 2, 16
+    batch = make_inputs(cfg, B, S, "train", seed=6)
+    assert _roundtrip(cfg, params, buffers, batch, B, S, 8) < 2e-5
+
+
+def test_cache_holds_rotated_keys(tiny_elite_cfg, tiny_elite_model):
+    """The paper's systems claim: cached elite keys are post-RoPE (never
+    re-rotated at decode).  Verify cache == rotate(k_e) explicitly."""
+    from repro.core import elite_attention, rope as rope_lib
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    B, S = 1, 8
+    batch = make_inputs(cfg, B, S, "train", seed=8)
+    cache = lm.init_cache(cfg, B, S, dtype=jnp.float32)
+    _, cache = lm.apply_prefill(params, buffers, cfg, batch, cache)
+    # recompute expected rotated k_e for layer 0
+    h = params["embed"]["table"][batch["tokens"]].astype(cfg.dtype)
+    from repro.models.layers import rmsnorm
+    p0 = jax.tree.map(lambda t: t[0], params["blocks"]["p0"])
+    b0 = jax.tree.map(lambda t: t[0], buffers["blocks"]["p0"])
+    hn = rmsnorm(p0["attn_norm"], h, cfg.norm_eps)
+    k_e = jnp.einsum("bsd,dhe->bshe", hn, p0["attn"]["wk_e"])
+    k_e = rope_lib.apply_elite_rope(k_e, jnp.arange(S), b0["elite_freqs"])
+    got = cache["blocks"]["p0"]["k_e"][0, :, :S]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(k_e), atol=1e-5)
+
+
+def test_elite_grad_flows(tiny_elite_cfg, tiny_elite_model):
+    params, buffers = tiny_elite_model
+    batch = make_inputs(tiny_elite_cfg, 2, 12, "train", seed=2)
+
+    def loss(p):
+        return lm.loss_fn(p, buffers, tiny_elite_cfg, batch)[0]
+
+    g = jax.grad(loss)(params)
+    leaves = {k: float(jnp.max(jnp.abs(v)))
+              for k, v in jax.tree_util.tree_leaves_with_path(g)
+              for k in ["/".join(str(getattr(x, 'key', x)) for x in k)][:1]}
+    attn_g = [float(jnp.max(jnp.abs(v))) for path, v in
+              jax.tree_util.tree_leaves_with_path(g)
+              if "a_kv" in str(path) or "bk" in str(path) or "wk_e" in str(path)]
+    assert all(x > 0 for x in attn_g), "no gradient through EliteKV params"
+
+
+def test_full_rank_all_elite_equals_baseline(tiny_cfg, tiny_model, key):
+    """r = C (all chunks rotated) + full-rank J-LRD ⇒ exactly the baseline."""
+    from repro.core import convert
+    params, buffers = tiny_model
+    cfg = tiny_cfg
+    C = cfg.head_dim // 2
+    sets = {li: jnp.tile(jnp.arange(C, dtype=jnp.int32)[None], (cfg.n_kv_heads, 1))
+            for li in range(cfg.num_layers)}
+    ek = EliteKVConfig(enabled=True, elite_r=C,
+                       d_ckv=min(cfg.n_kv_heads * cfg.head_dim, cfg.d_model))
+    ep, eb, ecfg = convert.convert_model(params, buffers, cfg, sets, ek)
+    batch = make_inputs(cfg, 2, 16, "train", seed=4)
+    l0, _ = lm.apply_train(params, buffers, cfg, batch)
+    l1, _ = lm.apply_train(ep, eb, ecfg, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0), atol=5e-5)

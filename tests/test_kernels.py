@@ -1,0 +1,129 @@
+"""Pallas kernels vs ref.py oracles — shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import elite_decode as ed
+from repro.kernels import flash_prefill as fp
+from repro.kernels import rope_elite as re_k
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("nkv,G,r2,dc,S,bs", [
+    (2, 4, 8, 64, 128, 32),
+    (1, 8, 16, 128, 256, 64),
+    (4, 1, 4, 32, 64, 64),       # MHA-like, single block
+    (2, 2, 8, 96, 96, 32),       # dc not 128-aligned, S==3 blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_elite_decode_sweep(nkv, G, r2, dc, S, bs, dtype):
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 5)
+    B = 2
+    nh = nkv * G
+    q_e = jax.random.normal(ks[0], (B, nh, r2), dtype)
+    q_lat = jax.random.normal(ks[1], (B, nh, dc), dtype)
+    k_e = jax.random.normal(ks[2], (B, S, nkv, r2), dtype)
+    c = jax.random.normal(ks[3], (B, S, dc), dtype)
+    lengths = jnp.array([S, max(1, S // 3)], jnp.int32)
+    o_k = ed.elite_decode(q_e, q_lat, k_e, c, c, lengths, G, 0.1,
+                          block_s=bs, interpret=True)
+    o_r = ref.elite_decode_ref(q_e, q_lat, k_e, c, c, lengths, G, 0.1)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32), **_tol(dtype))
+
+
+def test_elite_decode_separate_cv():
+    """S-LRD: distinct c_k / c_v caches."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    B, nkv, G, r2, dc, S = 1, 2, 2, 4, 32, 64
+    nh = nkv * G
+    q_e = jax.random.normal(ks[0], (B, nh, r2))
+    q_lat = jax.random.normal(ks[1], (B, nh, dc))
+    k_e = jax.random.normal(ks[2], (B, S, nkv, r2))
+    c_k = jax.random.normal(ks[3], (B, S, dc))
+    c_v = jax.random.normal(ks[4], (B, S, dc))
+    lengths = jnp.array([40], jnp.int32)
+    o_k = ed.elite_decode(q_e, q_lat, k_e, c_k, c_v, lengths, G, 0.2,
+                          block_s=16, interpret=True)
+    o_r = ref.elite_decode_ref(q_e, q_lat, k_e, c_k, c_v, lengths, G, 0.2)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("S,nh,nkv,dh,bq,bk", [
+    (64, 4, 2, 32, 16, 16),
+    (128, 2, 2, 64, 32, 64),
+    (96, 8, 2, 16, 32, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_sweep(S, nh, nkv, dh, bq, bk, dtype):
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, S, nh, dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, nkv, dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, nkv, dh), dtype)
+    o_k = fp.flash_prefill(q, k, v, nh // nkv, dh ** -0.5,
+                           block_q=bq, block_k=bk, interpret=True)
+    o_r = ref.flash_prefill_ref(q, k, v, nh // nkv, dh ** -0.5)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("S,H,r,bs", [(64, 4, 4, 16), (32, 2, 8, 32), (128, 1, 2, 64)])
+def test_rope_elite_sweep(S, H, r, bs):
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (2, S, H, 2 * r))
+    freqs = jnp.exp(-jax.random.uniform(jax.random.PRNGKey(3), (H, r)) * 4)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    o_k = re_k.rope_elite(x, pos, freqs, block_s=bs, interpret=True)
+    o_r = ref.rope_elite_ref(x, pos, freqs)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-5, rtol=1e-5)
+
+
+def test_kernel_matches_model_decode(tiny_elite_cfg, tiny_elite_model):
+    """elite_decode kernel output == the model's XLA absorbed-decode internals."""
+    from repro.configs import make_inputs
+    from repro.models import lm
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    B, S = 2, 16
+    batch = make_inputs(cfg, B, S, "train", seed=11)
+    cache = lm.init_cache(cfg, B, S, dtype=jnp.float32)
+    _, cache = lm.apply_prefill(params, buffers, cfg,
+                                {"tokens": batch["tokens"][:, :S - 1]}, cache)
+    # layer-0 decode internals
+    from repro.core import elite_attention as ea
+    from repro.models.layers import rmsnorm
+    p0 = jax.tree.map(lambda t: t[0], params["blocks"]["p0"])
+    b0 = jax.tree.map(lambda t: t[0], buffers["blocks"]["p0"])
+    h = params["embed"]["table"][batch["tokens"][:, S - 1:S]].astype(cfg.dtype)
+    hn = rmsnorm(p0["attn_norm"], h, cfg.norm_eps)
+    idx = cache["index"]
+    c0 = jax.tree.map(lambda t: t[0], cache["blocks"]["p0"])
+    out_ref, newc = ea.apply_decode(p0["attn"], cfg, b0, hn, idx, c0)
+
+    # kernel path: rebuild q_e/q_lat exactly as apply_decode does
+    from repro.core import rope as rope_lib
+    pos = jnp.full((B, 1), idx, jnp.int32)
+    q_e, q_ne = ea._project_q(p0["attn"], cfg, hn, pos)
+    q_e = ea._rot_q(cfg, b0, q_e, pos)
+    G = cfg.q_group
+    bk_q = rope_lib.expand_kv_to_q(jnp.moveaxis(p0["attn"]["bk"], 1, 0), G)
+    q_lat = jnp.einsum("bshn,hcn->bshc", q_ne, bk_q)
+    K_e = newc["k_e"].astype(jnp.float32)
+    C = newc["c"].astype(jnp.float32)
+    lengths = jnp.full((B,), idx + 1, jnp.int32)
+    o_lat = ed.elite_decode(q_e[:, 0], q_lat[:, 0], K_e, C, C, lengths, G,
+                            cfg.head_dim ** -0.5, block_s=8, interpret=True)
+    bv_q = rope_lib.expand_kv_to_q(jnp.moveaxis(p0["attn"]["bv"], 1, 0), G)
+    o_heads = jnp.einsum("bhc,hcd->bhd", o_lat, bv_q)
+    out_kernel = jnp.einsum("bhe,hed->bd", o_heads, p0["attn"]["wo"])[:, None]
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_ref),
+                               atol=5e-5, rtol=5e-5)

@@ -1,0 +1,99 @@
+"""Low-rank decomposition: exactness, J-vs-S storage formulas (paper §3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lrd
+
+
+@pytest.fixture(scope="module")
+def mats():
+    key = jax.random.PRNGKey(0)
+    d, nkv, d_nope, dh = 64, 2, 12, 16
+    wk = jax.random.normal(key, (d, nkv, d_nope)) / 8
+    wv = jax.random.normal(jax.random.PRNGKey(1), (d, nkv, dh)) / 8
+    return wk, wv
+
+
+def test_svd_full_rank_exact(mats):
+    wk, _ = mats
+    W = np.asarray(wk).reshape(64, -1)
+    A, B = lrd.svd_lowrank(W, min(W.shape))
+    np.testing.assert_allclose(A @ B, W, atol=1e-5)
+
+
+def test_jlrd_shapes_and_full_rank(mats):
+    wk, wv = mats
+    full = min(64, 2 * 12 + 2 * 16)
+    a, bk, bv = lrd.jlrd(wk, wv, full)
+    assert a.shape == (64, full)
+    assert bk.shape == (full, 2, 12)
+    assert bv.shape == (full, 2, 16)
+    rk = np.einsum("dc,chn->dhn", np.asarray(a), np.asarray(bk))
+    rv = np.einsum("dc,chn->dhn", np.asarray(a), np.asarray(bv))
+    np.testing.assert_allclose(rk, np.asarray(wk), atol=1e-4)
+    np.testing.assert_allclose(rv, np.asarray(wv), atol=1e-4)
+
+
+def test_error_monotone_in_rank(mats):
+    wk, wv = mats
+    errs = []
+    for r in (4, 8, 16, 32):
+        a, bk, bv = lrd.jlrd(wk, wv, r)
+        W = np.concatenate([np.asarray(wk).reshape(64, -1),
+                            np.asarray(wv).reshape(64, -1)], 1)
+        B = np.concatenate([np.asarray(bk).reshape(r, -1),
+                            np.asarray(bv).reshape(r, -1)], 1)
+        errs.append(lrd.reconstruction_error(W, a, B))
+    assert all(e1 >= e2 - 1e-9 for e1, e2 in zip(errs, errs[1:]))
+
+
+def test_optimal_slrd_split_beats_even(mats):
+    wk, wv = mats
+    budget = 24
+    ck, cv = lrd.optimal_slrd_split(wk, wv, budget)
+    assert ck + cv == budget
+
+    def tail_err(ck_, cv_):
+        sk = np.linalg.svd(np.asarray(wk).reshape(64, -1), compute_uv=False)
+        sv = np.linalg.svd(np.asarray(wv).reshape(64, -1), compute_uv=False)
+        return np.sum(sk[ck_:] ** 2) + np.sum(sv[cv_:] ** 2)
+
+    assert tail_err(ck, cv) <= tail_err(budget // 2, budget - budget // 2) + 1e-9
+
+
+def test_storage_formulas_match_param_count():
+    """Model-level parameter accounting == paper's closed forms."""
+    from repro.configs import get_config
+    import dataclasses
+    from repro.configs.base import EliteKVConfig
+    from repro.models import lm
+
+    cfg = get_config("tinyllama_1_1b").reduced(num_layers=1, vocab_size=128)
+    for lrd_kind in ("joint", "separate"):
+        e = EliteKVConfig(enabled=True, elite_r=4, d_ckv=48, d_ck=24, d_cv=24,
+                          lrd=lrd_kind)
+        ecfg = dataclasses.replace(cfg, elitekv=e)
+        params, _ = lm.init(jax.random.PRNGKey(0), ecfg)
+        attn = params["blocks"]["p0"]["attn"]
+        got = sum(x.size for x in jax.tree.leaves(attn))
+        d, dh, nh, nkv = ecfg.d_model, ecfg.head_dim, ecfg.n_heads, ecfg.n_kv_heads
+        r = e.elite_r
+        rot = d * 2 * r * nkv
+        if lrd_kind == "joint":
+            expect = (d * nh * dh + rot + nh * dh * d
+                      + e.d_ckv * (d + nkv * (dh - 2 * r) + nkv * dh))
+        else:
+            expect = (d * nh * dh + rot + nh * dh * d
+                      + e.d_ck * (d + nkv * (dh - 2 * r))
+                      + e.d_cv * (d + nkv * dh))
+        assert got == expect, (lrd_kind, got, expect)
+
+
+def test_cache_formula(tiny_elite_cfg):
+    """Cache/token/layer == 2·r·n_kv + d_ckv (paper §3.2)."""
+    e = tiny_elite_cfg.elitekv
+    got = e.cache_per_token_per_layer(tiny_elite_cfg.n_kv_heads,
+                                      tiny_elite_cfg.head_dim)
+    assert got == 2 * e.elite_r * tiny_elite_cfg.n_kv_heads + e.d_ckv

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rope as rope_lib
+
+_fast = settings(max_examples=20, deadline=None)
+
+
+@given(dh=st.sampled_from([8, 16, 32, 64]),
+       theta=st.floats(10.0, 1e6),
+       seed=st.integers(0, 2**16))
+@_fast
+def test_rope_norm_preserved(dh, theta, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 4, 2, dh))
+    rot = rope_lib.apply_rope(x, jnp.arange(4), theta)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(rot), axis=-1),
+                               rtol=1e-4)
+
+
+@given(m=st.integers(0, 500), n=st.integers(0, 500), delta=st.integers(0, 300),
+       seed=st.integers(0, 100))
+@_fast
+def test_rope_relative_shift_invariance(m, n, delta, seed):
+    q = jax.random.normal(jax.random.PRNGKey(seed), (1, 1, 1, 8))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 1, 1, 8))
+
+    def s(a, b):
+        qa = rope_lib.apply_rope(q, jnp.array([a]), 1000.0)
+        kb = rope_lib.apply_rope(k, jnp.array([b]), 1000.0)
+        return float(jnp.sum(qa * kb))
+
+    assert s(m, n) == pytest.approx(s(m + delta, n + delta), rel=2e-3, abs=2e-4)
+
+
+@given(nkv=st.sampled_from([1, 2, 4]), dh=st.sampled_from([16, 32, 64]),
+       r=st.integers(1, 6), dc=st.sampled_from([16, 64, 256]))
+@_fast
+def test_cache_formula_invariant(nkv, dh, r, dc):
+    """Formula == measured cache size for arbitrary valid EliteKV dims."""
+    from repro.configs.base import EliteKVConfig
+    from repro.core import elite_attention
+    if 2 * r >= dh:
+        return
+    e = EliteKVConfig(enabled=True, elite_r=r, d_ckv=dc)
+    cfg = dataclasses.replace(
+        __import__("repro.configs", fromlist=["get_config"]).get_config(
+            "tinyllama_1_1b").reduced(),
+        n_kv_heads=nkv, n_heads=nkv * 2, d_head=dh, elitekv=e)
+    cache = elite_attention.init_cache(cfg, batch=2, max_len=5, dtype=jnp.float32)
+    floats = sum(x.size for x in jax.tree.leaves(cache)) // (2 * 5)
+    assert floats == e.cache_per_token_per_layer(nkv, dh)
+
+
+@given(seed=st.integers(0, 1000), k=st.integers(1, 3), E=st.sampled_from([4, 8]))
+@_fast
+def test_moe_gates_normalized(seed, k, E):
+    from repro.models import moe as moe_lib
+    from repro.configs import get_config
+    cfg = get_config("qwen3_moe_235b").reduced(
+        num_layers=2, d_model=16, n_experts=E, top_k=k, moe_dff=8)
+    params = moe_lib.init(jax.random.PRNGKey(seed), cfg)
+    xf = jax.random.normal(jax.random.PRNGKey(seed + 1), (10, 16))
+    gates, idx, aux = moe_lib._route(params, cfg, xf)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-3)
+    assert int(idx.max()) < E
+    # top-k indices unique per token
+    for row in np.asarray(idx):
+        assert len(set(row.tolist())) == k
+    assert float(aux) >= 1.0 - 1e-5  # Switch aux lower bound at uniform
+
+
+@given(seed=st.integers(0, 500), scale=st.floats(0.01, 10.0))
+@_fast
+def test_int8_quant_roundtrip_bound(seed, scale):
+    from repro.optim.adamw import _dequant, _quant
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32)) * scale
+    q = _quant(x)
+    assert q["q"].dtype == jnp.int8
+    err = jnp.max(jnp.abs(_dequant(q) - x) / jnp.maximum(q["s"], 1e-20))
+    assert float(err) <= 0.5 + 1e-3
+
+
+@given(chunk=st.integers(1, 24), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_ssm_scan_chunk_invariance(chunk, seed):
+    from repro.models import mamba as mamba_lib
+    B, S, di, N = 1, 12, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di)))
+    xs = jax.random.normal(ks[1], (B, S, di))
+    Bm = jax.random.normal(ks[2], (B, S, N))
+    Cm = jax.random.normal(ks[3], (B, S, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (di, N)))
+    D = jnp.ones(di)
+    y1, h1 = mamba_lib.ssm_scan(dt, xs, Bm, Cm, A, D, chunk=chunk)
+    y2, h2 = mamba_lib.ssm_scan(dt, xs, Bm, Cm, A, D, chunk=S)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4, rtol=1e-4)
+
+
+@given(B=st.integers(1, 3), length=st.integers(1, 32), seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_elite_decode_kernel_vs_oracle_property(B, length, seed):
+    from repro.kernels import elite_decode as ed
+    from repro.kernels import ref
+    nkv, G, r2, dc, S = 2, 2, 4, 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q_e = jax.random.normal(ks[0], (B, nkv * G, r2))
+    q_lat = jax.random.normal(ks[1], (B, nkv * G, dc))
+    k_e = jax.random.normal(ks[2], (B, S, nkv, r2))
+    c = jax.random.normal(ks[3], (B, S, dc))
+    lengths = jnp.full((B,), min(length, S), jnp.int32)
+    o_k = ed.elite_decode(q_e, q_lat, k_e, c, c, lengths, G, 0.25,
+                          block_s=8, interpret=True)
+    o_r = ref.elite_decode_ref(q_e, q_lat, k_e, c, c, lengths, G, 0.25)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=3e-5, rtol=3e-5)

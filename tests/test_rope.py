@@ -1,0 +1,100 @@
+"""RoPE unit tests: relative-position identity, subset masks, per-head elite."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rope as rope_lib
+
+
+def test_chunk_freqs_descending():
+    f = rope_lib.chunk_freqs(64, 10000.0)
+    assert f.shape == (32,)
+    assert np.all(np.diff(np.asarray(f)) < 0)
+    assert float(f[0]) == 1.0
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+    rot = rope_lib.apply_rope(x, jnp.arange(8), 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(rot), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """⟨R(m)q, R(n)k⟩ depends only on m − n (paper Eq. 1)."""
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+
+    def score(m, n):
+        qm = rope_lib.apply_rope(q, jnp.array([m]), 100.0)
+        kn = rope_lib.apply_rope(k, jnp.array([n]), 100.0)
+        return float(jnp.sum(qm * kn))
+
+    assert score(5, 3) == pytest.approx(score(12, 10), rel=1e-4)
+    assert score(7, 0) == pytest.approx(score(17, 10), rel=1e-4)
+
+
+def test_subset_mask_identity_and_full():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+    pos = jnp.arange(8)
+    none = rope_lib.apply_rope_subset(x, pos, 100.0, jnp.zeros(8, bool))
+    np.testing.assert_allclose(np.asarray(none), np.asarray(x), atol=1e-6)
+    full = rope_lib.apply_rope_subset(x, pos, 100.0, jnp.ones(8, bool))
+    ref = rope_lib.apply_rope(x, pos, 100.0)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(ref), atol=1e-5)
+
+
+def test_subset_per_head_masks():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, 8))
+    pos = jnp.arange(4)
+    mask = jnp.array([[True, False, True, False],
+                      [False, True, False, True]])
+    out = rope_lib.apply_rope_subset(x, pos, 50.0, mask)
+    # head 0 chunk 1 (dims 2:4) must be untouched
+    np.testing.assert_allclose(np.asarray(out[:, :, 0, 2:4]),
+                               np.asarray(x[:, :, 0, 2:4]), atol=1e-6)
+    # head 1 chunk 0 (dims 0:2) untouched
+    np.testing.assert_allclose(np.asarray(out[:, :, 1, 0:2]),
+                               np.asarray(x[:, :, 1, 0:2]), atol=1e-6)
+
+
+def test_elite_rope_matches_subset_after_permutation():
+    """apply_elite_rope on permuted dims == apply_rope_subset on originals."""
+    B, S, H, dh = 1, 6, 2, 16
+    C = dh // 2
+    r = 3
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, H, dh))
+    pos = jnp.arange(S)
+    theta = 200.0
+    elite = jnp.array([[0, 5, 2], [7, 1, 4]], jnp.int32)
+    freqs = rope_lib.chunk_freqs(dh, theta)[elite]            # [H, r]
+    # permute elite dims first
+    from repro.core.convert import _perm_for
+    xs = []
+    for h in range(H):
+        perm = _perm_for(np.asarray(elite[h]), C)
+        xs.append(np.asarray(x)[:, :, h, perm])
+    xp = jnp.asarray(np.stack(xs, axis=2))
+    rot_elite = rope_lib.apply_elite_rope(xp[..., :2 * r], pos, freqs)
+    # reference: subset rope then permute
+    mask = np.zeros((H, C), bool)
+    for h in range(H):
+        mask[h, np.asarray(elite[h])] = True
+    ref_full = rope_lib.apply_rope_subset(x, pos, theta, jnp.asarray(mask))
+    refs = []
+    for h in range(H):
+        perm = _perm_for(np.asarray(elite[h]), C)
+        refs.append(np.asarray(ref_full)[:, :, h, perm[:2 * r]])
+    ref = np.stack(refs, axis=2)
+    np.testing.assert_allclose(np.asarray(rot_elite), ref, atol=1e-5)
+
+
+def test_expand_kv_to_q():
+    per_kv = jnp.arange(6).reshape(2, 3)
+    out = rope_lib.expand_kv_to_q(per_kv, 2)
+    assert out.shape == (4, 3)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+    np.testing.assert_array_equal(np.asarray(out[2]), np.asarray(out[3]))

@@ -1,0 +1,90 @@
+"""RoPElite greedy search: validity, optimality vs baselines, brute-force check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ropelite
+from repro.configs import make_inputs
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def searched(tiny_cfg, tiny_model):
+    params, buffers = tiny_model
+    batch = make_inputs(tiny_cfg, 2, 24, "train", seed=3)
+    sets = {m: ropelite.search_model(params, buffers, tiny_cfg, batch, r=4, method=m)
+            for m in ("greedy", "uniform", "contribution")}
+    return sets, batch
+
+
+def test_sets_valid(searched, tiny_cfg):
+    sets, _ = searched
+    C = tiny_cfg.head_dim // 2
+    for m, per_layer in sets.items():
+        assert sorted(per_layer.keys()) == list(range(tiny_cfg.num_layers))
+        for li, idx in per_layer.items():
+            idx = np.asarray(idx)
+            assert idx.shape == (tiny_cfg.n_kv_heads, 4)
+            assert idx.min() >= 0 and idx.max() < C
+            for h in range(idx.shape[0]):
+                assert len(set(idx[h].tolist())) == 4, f"dup chunks {m} L{li}"
+
+
+def _layer_distance(tiny_cfg, tiny_model, batch, elite_idx, layer=0):
+    params, buffers = tiny_model
+    caps = lm.capture_attn_inputs(params, buffers, tiny_cfg, batch)
+    x = caps["p0"][layer]
+    lp = jax.tree.map(lambda t: t[layer], params["blocks"]["p0"]["attn"])
+    q, k = ropelite._layer_qk(lp, tiny_cfg, x)
+    pos = jnp.arange(x.shape[1])
+    return float(ropelite.score_distance(
+        q, k, pos, tiny_cfg.rope_theta, tiny_cfg.q_group, elite_idx).sum())
+
+
+def test_greedy_beats_baselines(searched, tiny_cfg, tiny_model):
+    """Paper Table 2 mechanism: greedy < {contribution, uniform} on ‖Δs‖₁."""
+    sets, batch = searched
+    d = {m: _layer_distance(tiny_cfg, tiny_model, batch, sets[m][0])
+         for m in sets}
+    assert d["greedy"] <= d["contribution"] * 1.001
+    assert d["greedy"] <= d["uniform"] * 1.001
+
+
+def test_greedy_first_pick_is_bruteforce_argmin(tiny_cfg, tiny_model):
+    """r=1 greedy == exhaustive search over single chunks (per KV head)."""
+    params, buffers = tiny_model
+    batch = make_inputs(tiny_cfg, 1, 16, "train", seed=7)
+    caps = lm.capture_attn_inputs(params, buffers, tiny_cfg, batch)
+    x = caps["p0"][0]
+    lp = jax.tree.map(lambda t: t[0], params["blocks"]["p0"]["attn"])
+    q, k = ropelite._layer_qk(lp, tiny_cfg, x)
+    pos = jnp.arange(x.shape[1])
+    got = ropelite.greedy_search_layer(q, k, pos, tiny_cfg.rope_theta,
+                                       tiny_cfg.q_group, r=1)
+    C = tiny_cfg.head_dim // 2
+    dists = np.stack([
+        np.asarray(ropelite.score_distance(
+            q, k, pos, tiny_cfg.rope_theta, tiny_cfg.q_group,
+            jnp.full((tiny_cfg.n_kv_heads, 1), c, jnp.int32)))
+        for c in range(C)])                                   # [C, nkv]
+    brute = dists.argmin(axis=0)
+    np.testing.assert_array_equal(np.asarray(got)[:, 0], brute)
+
+
+def test_greedy_distance_decreases_with_r(tiny_cfg, tiny_model):
+    params, buffers = tiny_model
+    batch = make_inputs(tiny_cfg, 1, 16, "train", seed=9)
+    prev = None
+    for r in (1, 2, 4):
+        sets = ropelite.search_model(params, buffers, tiny_cfg, batch, r=r)
+        d = _layer_distance(tiny_cfg, tiny_model, batch, sets[0])
+        if prev is not None:
+            assert d <= prev * 1.001, f"distance increased at r={r}"
+        prev = d
+
+
+def test_uniform_selection_shape():
+    sel = ropelite.uniform_selection(16, 4, 3)
+    assert sel.shape == (3, 4)
+    assert len(set(np.asarray(sel)[0].tolist())) == 4

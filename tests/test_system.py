@@ -1,0 +1,73 @@
+"""End-to-end behaviour: the paper's full pipeline at miniature scale —
+train a baseline RoPE LM → RoPElite search → J-LRD convert → uptrain →
+verify recovery + compressed serving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import EliteKVConfig
+from repro.core import convert
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import lm
+from repro.runtime import serve_loop, train_loop
+
+
+@pytest.fixture(scope="module")
+def pipeline_result():
+    cfg = get_config("tinyllama_1_1b").reduced(
+        num_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, vocab_size=128)
+    key = jax.random.PRNGKey(0)
+    params, buffers = lm.init(key, cfg)
+    data = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    batch_size=4, seed=0))
+    tc = train_loop.TrainConfig(lr=3e-3)
+    params, _, hist = train_loop.train(params, buffers, cfg, tc, iter(data),
+                                       60, log_every=5)
+    base_loss = hist[-1][1]
+
+    calib = next(iter(TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                               seq_len=32, batch_size=2, seed=9))))
+    ek = EliteKVConfig(enabled=True, elite_r=2, d_ckv=8)  # (8+8)/64 = 25%
+    ep, eb, ecfg = convert.elitekv_from_baseline(
+        params, buffers, cfg, {"tokens": calib["tokens"]}, ek)
+    data2 = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                     batch_size=4, seed=0))
+    conv_loss0 = float(lm.loss_fn(ep, eb, ecfg, next(iter(data2)))[0])
+    data3 = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                     batch_size=4, seed=0))
+    ep, _, hist2 = train_loop.train(ep, eb, ecfg, tc, iter(data3), 80, log_every=5)
+    return dict(cfg=cfg, ecfg=ecfg, params=params, buffers=buffers, ep=ep, eb=eb,
+                base_loss=base_loss, conv_loss0=conv_loss0,
+                uptrained_loss=hist2[-1][1])
+
+
+def test_baseline_trains(pipeline_result):
+    r = pipeline_result
+    assert r["base_loss"] < np.log(128) - 0.1  # below uniform
+
+
+def test_uptraining_recovers(pipeline_result):
+    """Paper Fig. 6 mechanism: conversion hurts, uptraining recovers most."""
+    r = pipeline_result
+    assert r["conv_loss0"] > r["base_loss"]          # surgery costs something
+    assert r["uptrained_loss"] < r["conv_loss0"]     # uptraining recovers
+    assert r["uptrained_loss"] < r["base_loss"] + 0.5
+
+
+def test_cache_is_quarter(pipeline_result):
+    from repro.core.cache import cache_ratio
+    r = pipeline_result
+    assert cache_ratio(r["ecfg"], r["cfg"]) == pytest.approx(0.25, abs=0.05)
+
+
+def test_compressed_model_serves(pipeline_result):
+    r = pipeline_result
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0, 128, jnp.int32)
+    out, stats = serve_loop.generate(r["ep"], r["eb"], r["ecfg"], prompts, 4)
+    assert out.shape == (2, 4)
+    assert stats.cache_bytes > 0
