@@ -1,16 +1,28 @@
-"""KV-cache size accounting — the quantity the paper optimizes.
+"""KV-cache size accounting + the block-paged compressed-KV pool.
 
-Formulas (paper §3.2), per token per attention layer, in floats:
+Size formulas (paper §3.2), per token per attention layer, in floats:
     vanilla MHA/GQA:      2 · n_kv · d_h
     RoPElite + J-LRD:     2 · r · n_kv + d_ckv
     RoPElite + S-LRD:     2 · r · n_kv + d_ck + d_cv
 Mamba layers hold O(1) state instead (conv + ssm), reported separately.
+
+Paged pool
+----------
+``PagedKVPool`` stores the compressed ``(k_e, c_kv)`` streams of every
+attention layer in fixed-size token *blocks* shared across sequences
+(vLLM-style).  Sequences own ragged chains of blocks via per-sequence block
+tables; the serving scheduler allocates on admission, grows one block at a
+time during decode, and recycles blocks the moment a sequence retires.
+Device pages are plain jax arrays handed to jitted steps and reassigned;
+all bookkeeping (free list, tables, lengths) is host-side Python.
 """
 from __future__ import annotations
 
-from typing import Dict
+import dataclasses
+from typing import Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
@@ -35,6 +47,190 @@ def cache_ratio(cfg_elite: ModelConfig, cfg_base: ModelConfig) -> float:
     a = model_cache_floats_per_token(cfg_elite)
     b = model_cache_floats_per_token(cfg_base)
     return a / b if b else 1.0
+
+
+class OutOfBlocks(RuntimeError):
+    """Raised when the pool cannot satisfy an allocation (caller may retry
+    after retiring sequences, or refuse admission)."""
+
+
+class BlockAllocator:
+    """Host-side free-list over ``num_blocks`` fixed-size token blocks."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.high_water = 0          # max blocks simultaneously in use
+        self.total_allocs = 0        # lifetime alloc count (reuse visibility)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self, n: int = 1) -> List[int]:
+        if n > len(self._free):
+            raise OutOfBlocks(f"need {n} blocks, {len(self._free)} free")
+        got = [self._free.pop() for _ in range(n)]
+        self.total_allocs += n
+        self.high_water = max(self.high_water, self.num_used)
+        return got
+
+    def free(self, blocks: Sequence[int]) -> None:
+        self._free.extend(blocks)
+
+    def reset(self) -> None:
+        self._free = list(range(self.num_blocks - 1, -1, -1))
+
+
+@dataclasses.dataclass
+class PoolStats:
+    block_size: int
+    num_blocks: int
+    blocks_in_use: int
+    blocks_free: int
+    high_water_blocks: int
+    total_allocs: int
+    live_tokens: int        # sum of sequence lengths
+    allocated_tokens: int   # blocks_in_use * block_size (internal fragmentation)
+    live_bytes: int
+    allocated_bytes: int
+
+
+class PagedKVPool:
+    """Block-paged device storage for EliteKV's compressed cache streams.
+
+    Pages mirror ``lm.init_cache``'s per-``p_pos`` layout but replace the
+    ``[B, max_len, ...]`` leading dims with one flat ``[n_slots, ...]`` token
+    axis (``n_slots = num_blocks · block_size``); token ``t`` of block ``b``
+    lives at flat slot ``b · block_size + t``.  Only attention layers page —
+    serving currently requires an attention-only, EliteKV-enabled config
+    (Mamba's O(1) state needs no paging; hybrid support is a ROADMAP item).
+    """
+
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int,
+                 dtype=jnp.float32):
+        assert cfg.elitekv.enabled, "paged pool stores compressed streams only"
+        for p_pos in range(cfg.block_period):
+            assert cfg.layer_kind(p_pos) == "attn", \
+                "paged serving supports attention-only stacks (see ROADMAP)"
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.dtype = dtype
+        self.allocator = BlockAllocator(num_blocks)
+        self._tables: Dict[int, List[int]] = {}   # seq_id → block chain
+        self._lengths: Dict[int, int] = {}        # seq_id → live token count
+        e = cfg.elitekv
+        n_super = cfg.num_layers // cfg.block_period
+        n_slots = num_blocks * block_size
+        r2 = 2 * e.elite_r
+
+        def _streams():
+            s = {"k_e": jnp.zeros((n_super, n_slots, cfg.n_kv_heads, r2), dtype)}
+            if e.lrd == "joint":
+                s["c"] = jnp.zeros((n_super, n_slots, e.d_ckv), dtype)
+            else:
+                s["c_k"] = jnp.zeros((n_super, n_slots, e.d_ck), dtype)
+                s["c_v"] = jnp.zeros((n_super, n_slots, e.d_cv), dtype)
+            return s
+
+        self.pages = {f"p{p}": _streams() for p in range(cfg.block_period)}
+
+    # -- sequence lifecycle -------------------------------------------------
+    def ensure_capacity(self, seq_id: int, length: int) -> None:
+        """Grow ``seq_id``'s block chain to hold ``length`` tokens (allocates
+        lazily on first touch).  Raises OutOfBlocks when the pool is full."""
+        table = self._tables.setdefault(seq_id, [])
+        need = -(-length // self.block_size) - len(table)
+        if need > 0:
+            table.extend(self.allocator.alloc(need))
+        self._lengths[seq_id] = max(self._lengths.get(seq_id, 0), length)
+
+    def can_fit(self, extra_tokens: int) -> bool:
+        return self.allocator.num_free * self.block_size >= extra_tokens
+
+    def free_seq(self, seq_id: int) -> None:
+        self.allocator.free(self._tables.pop(seq_id, []))
+        self._lengths.pop(seq_id, None)
+
+    def reset(self) -> None:
+        self.allocator.reset()
+        self._tables.clear()
+        self._lengths.clear()
+
+    def length(self, seq_id: int) -> int:
+        return self._lengths.get(seq_id, 0)
+
+    def block_table(self, seq_id: int) -> List[int]:
+        return list(self._tables.get(seq_id, []))
+
+    # -- device-side index helpers -----------------------------------------
+    @property
+    def oob_slot(self) -> int:
+        """Scatter sentinel: one past the last flat slot (dropped by
+        ``mode="drop"`` writes — used to mask inactive batch lanes)."""
+        return self.num_blocks * self.block_size
+
+    def block_table_array(self, seq_ids: Sequence[Optional[int]],
+                          max_blocks: int) -> np.ndarray:
+        """Padded int32 ``[len(seq_ids), max_blocks]`` table (pad = block 0;
+        padded pages are masked out by per-sequence lengths downstream)."""
+        out = np.zeros((len(seq_ids), max_blocks), np.int32)
+        for i, sid in enumerate(seq_ids):
+            if sid is None:
+                continue
+            t = self._tables.get(sid, [])
+            assert len(t) <= max_blocks, (len(t), max_blocks)
+            out[i, :len(t)] = t
+        return out
+
+    def slot_mapping(self, seq_ids: Sequence[Optional[int]],
+                     positions: Sequence[int]) -> np.ndarray:
+        """Flat write slots for one token per sequence; inactive lanes
+        (seq_id None) map to ``oob_slot``."""
+        out = np.full((len(seq_ids),), self.oob_slot, np.int32)
+        for i, (sid, pos) in enumerate(zip(seq_ids, positions)):
+            if sid is None:
+                continue
+            table = self._tables[sid]
+            out[i] = table[pos // self.block_size] * self.block_size \
+                + pos % self.block_size
+        return out
+
+    def prefill_slot_mapping(self, seq_id: int, start: int,
+                             n_tokens: int, pad_to: int) -> np.ndarray:
+        """Flat write slots for ``n_tokens`` consecutive positions starting at
+        ``start``, padded with ``oob_slot`` up to ``pad_to`` (prompt padding)."""
+        out = np.full((pad_to,), self.oob_slot, np.int32)
+        table = self._tables[seq_id]
+        for i in range(n_tokens):
+            pos = start + i
+            out[i] = table[pos // self.block_size] * self.block_size \
+                + pos % self.block_size
+        return out
+
+    # -- accounting ---------------------------------------------------------
+    def floats_per_token(self) -> int:
+        return model_cache_floats_per_token(self.cfg)
+
+    def stats(self) -> PoolStats:
+        itemsize = jnp.dtype(self.dtype).itemsize
+        live = sum(self._lengths.values())
+        alloc_tok = self.allocator.num_used * self.block_size
+        fpt = self.floats_per_token()
+        return PoolStats(
+            block_size=self.block_size, num_blocks=self.num_blocks,
+            blocks_in_use=self.allocator.num_used,
+            blocks_free=self.allocator.num_free,
+            high_water_blocks=self.allocator.high_water,
+            total_allocs=self.allocator.total_allocs,
+            live_tokens=live, allocated_tokens=alloc_tok,
+            live_bytes=live * fpt * itemsize,
+            allocated_bytes=alloc_tok * fpt * itemsize)
 
 
 def measured_cache_bytes(cache, batch: int, max_len: int) -> Dict[str, int]:

@@ -208,10 +208,10 @@ def apply_decode(params, cfg, buffers, x, index, cache, use_kernel: bool = False
 
     if use_kernel:
         from repro.kernels import ops as kops
-        o_lat, o_e_scores = None, None  # kernel returns o directly
+        lengths = jnp.full((B,), index + 1, jnp.int32)
         o = kops.elite_decode(
             q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k, C_v,
-            index=index, q_group=G, scale=dh ** -0.5)
+            lengths, q_group=G, scale=dh ** -0.5)
         o = o.reshape(B, 1, nh, C_v.shape[-1])
     else:
         # scores: rotary-elite part (K_e repeated to q heads — GSPMD-clean)
@@ -233,3 +233,93 @@ def apply_decode(params, cfg, buffers, x, index, cache, use_kernel: bool = False
     o_heads = jnp.einsum("bqhc,hcd->bqhd", o, bv_q.astype(dt))
     out = jnp.einsum("bshe,hed->bsd", o_heads, params["wo"].astype(dt))
     return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged variants — the cache lives in a shared block pool (serving runtime)
+# ---------------------------------------------------------------------------
+
+def _scatter_pages(pages, k_e_new, c_k_new, c_v_new, slot_mapping):
+    """Write per-token compressed streams into pool pages at flat slots.
+    Out-of-range slots (the inactive-lane / prompt-padding sentinel) are
+    dropped.  k_e_new [N,nkv,2r], c_*_new [N,dc], slot_mapping [N]."""
+    new = dict(pages)
+    put = lambda buf, val: buf.at[slot_mapping].set(
+        val.astype(buf.dtype), mode="drop")
+    new["k_e"] = put(pages["k_e"], k_e_new)
+    if "c" in pages:
+        new["c"] = put(pages["c"], c_k_new)
+    else:
+        new["c_k"] = put(pages["c_k"], c_k_new)
+        new["c_v"] = put(pages["c_v"], c_v_new)
+    return new
+
+
+def _page_latents(pages):
+    if "c" in pages:
+        return pages["c"], pages["c"]
+    return pages["c_k"], pages["c_v"]
+
+
+def apply_prefill_paged(params, cfg, buffers, x, positions, pages,
+                        slot_mapping, constrain=lambda n, t: t):
+    """Prefill fresh sequences and scatter their streams into pool pages.
+
+    A fresh sequence has no prior context, so attention is ordinary causal
+    self-attention over the (padded) prompt; only the cache *write* is paged.
+    x [B,S,d]; slot_mapping [B,S] flat pool slots (pad positions → sentinel).
+    → (out [B,S,d], new_pages)
+    """
+    from repro.models.attention import _attend
+    q, k, v, k_e, c_k, c_v = _materialized(params, cfg, buffers, x, positions,
+                                           constrain)
+    B, S = x.shape[:2]
+    new_pages = _scatter_pages(
+        pages, k_e.reshape(B * S, *k_e.shape[2:]),
+        c_k.reshape(B * S, -1), c_v.reshape(B * S, -1),
+        slot_mapping.reshape(B * S))
+    o = _attend(q, k, v, cfg.q_group, cfg.head_dim ** -0.5,
+                chunk_q=cfg.attn_chunk_q, constrain=constrain,
+                unroll=cfg.attn_chunk_unroll)
+    return jnp.einsum("bshe,hed->bsd", o, params["wo"].astype(x.dtype)), new_pages
+
+
+def apply_decode_paged(params, cfg, buffers, x, pages, slot_mapping,
+                       block_tables, lengths, block_size: int,
+                       use_kernel: bool = True, constrain=lambda n, t: t):
+    """Absorbed decode over the block pool — one token per serving slot.
+
+    x [B,1,d]; lengths [B] live length *including* the new token (0 for
+    inactive lanes, whose writes hit the sentinel slot and whose attention
+    output is zeroed); slot_mapping [B]; block_tables [B,max_blocks].
+    → (out [B,1,d], new_pages)
+    """
+    dt = x.dtype
+    B = x.shape[0]
+    nh, dh = cfg.n_heads, cfg.head_dim
+    G = cfg.q_group
+    pos = (lengths - 1)[:, None]                             # [B,1] per-lane
+
+    q_e, q_ne = _project_q(params, cfg, x, pos)
+    q_e = constrain("attn_q", _rot_q(cfg, buffers, q_e, pos))
+    bk_q = rope_lib.expand_kv_to_q(jnp.moveaxis(params["bk"], 1, 0), G)
+    q_lat = constrain("attn_q", jnp.einsum("bshn,hcn->bshc", q_ne, bk_q.astype(dt)))
+
+    k_e_new = jnp.einsum("bsd,dhe->bshe", x, params["wk_e"].astype(dt))
+    k_e_new = rope_lib.apply_elite_rope(k_e_new, pos, buffers["elite_freqs"])
+    c_k_new, c_v_new = _latents(params, cfg, x)
+    new_pages = _scatter_pages(pages, k_e_new[:, 0], c_k_new[:, 0],
+                               c_v_new[:, 0], slot_mapping)
+
+    from repro.kernels import ops as kops
+    K_e, (C_k, C_v) = new_pages["k_e"], _page_latents(new_pages)
+    o = kops.elite_decode_paged(
+        q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k, C_v,
+        block_tables, lengths, q_group=G, scale=dh ** -0.5,
+        block_size=block_size, force_xla=not use_kernel)
+    o = o.reshape(B, 1, nh, C_v.shape[-1]).astype(dt)
+
+    bv_q = rope_lib.expand_kv_to_q(jnp.moveaxis(params["bv"], 1, 0), G)
+    o_heads = jnp.einsum("bqhc,hcd->bqhd", o, bv_q.astype(dt))
+    out = jnp.einsum("bshe,hed->bsd", o_heads, params["wo"].astype(dt))
+    return out, new_pages

@@ -124,3 +124,131 @@ def elite_decode(q_e, q_lat, k_e, c_k, c_v, lengths, q_group: int,
         name="elite_decode",
     )(lengths, q_e_g, q_lat_g, k_e, c_k, c_v)
     return out.reshape(B, nh, d_c)
+
+
+# ---------------------------------------------------------------------------
+# paged decode: the cache lives in a block pool, sequences own block chains
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(block_tables_ref,           # scalar-prefetch [B, mb] int32
+                  lengths_ref,                # scalar-prefetch [B] int32
+                  q_e_ref, q_lat_ref, k_e_ref, c_k_ref, c_v_ref,
+                  o_ref,
+                  acc_ref, m_ref, l_ref,
+                  *, block_size: int, scale: float, max_blocks: int):
+    """Same online softmax as ``_kernel``; grid dim 2 walks the *block table*
+    instead of a contiguous S axis — the BlockSpec index maps below pull page
+    ``block_tables[b, sb]`` straight from the pool, so no gather ever
+    materializes the sequence contiguously."""
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    start = sb * block_size
+
+    @pl.when(start < length)
+    def _step():
+        q_e = q_e_ref[0, 0]                           # [G, 2r]
+        q_lat = q_lat_ref[0, 0]                       # [G, d_c]
+        k_e = k_e_ref[0, :, 0, :]                     # [block_size, 2r]
+        c_k = c_k_ref[0]                              # [block_size, d_c]
+        s = jax.lax.dot_general(
+            q_e, k_e, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [G, block_size]
+        s += jax.lax.dot_general(
+            q_lat, c_k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s *= scale
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(c_v_ref.dtype), c_v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [G, d_c]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(sb == max_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def elite_decode_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                       block_tables, lengths, q_group: int, scale: float,
+                       block_size: int, interpret: bool = False):
+    """See kernels/ref.py::elite_decode_paged_ref for exact semantics.
+
+    q_e [B,nh,2r], q_lat [B,nh,d_c], k_e_pages [n_slots,nkv,2r],
+    c_k/c_v_pages [n_slots,d_c], block_tables [B,mb] int32, lengths [B] int32
+    →  o [B,nh,d_c].  Length-0 sequences (empty slots) produce zeros.
+    """
+    B, nh, r2 = q_e.shape
+    nkv = k_e_pages.shape[1]
+    d_c = c_k_pages.shape[-1]
+    G = q_group
+    assert nh == nkv * G, (nh, nkv, G)
+    assert k_e_pages.shape[0] % block_size == 0, (k_e_pages.shape, block_size)
+    n_blocks_pool = k_e_pages.shape[0] // block_size
+    mb = block_tables.shape[1]
+    assert block_tables.shape == (B, mb) and lengths.shape == (B,)
+
+    q_e_g = q_e.reshape(B, nkv, G, r2)
+    q_lat_g = q_lat.reshape(B, nkv, G, d_c)
+    k_e_p = k_e_pages.reshape(n_blocks_pool, block_size, nkv, r2)
+    c_k_p = c_k_pages.reshape(n_blocks_pool, block_size, d_c)
+    c_v_p = c_v_pages.reshape(n_blocks_pool, block_size, d_c)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, block_size=block_size, scale=scale,
+                          max_blocks=mb),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nkv, mb),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, r2), lambda b, h, s, bt, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, d_c), lambda b, h, s, bt, L: (b, h, 0, 0)),
+                # pool pages, indexed through the prefetched block table
+                pl.BlockSpec((1, block_size, 1, r2),
+                             lambda b, h, s, bt, L: (bt[b, s], 0, h, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, bt, L: (bt[b, s], 0, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, bt, L: (bt[b, s], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, d_c), lambda b, h, s, bt, L: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, d_c), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nkv, G, d_c), c_v_pages.dtype),
+        interpret=interpret,
+        name="elite_decode_paged",
+    )(block_tables, lengths, q_e_g, q_lat_g, k_e_p, c_k_p, c_v_p)
+    return out.reshape(B, nh, d_c)
+
+
+def elite_decode_paged_xla(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                           block_tables, lengths, q_group: int, scale: float,
+                           block_size: int):
+    """Gather-based XLA fallback with identical semantics to the Pallas paged
+    kernel (used on CPU and for shapes the TPU lowering rejects).  One gather
+    materializes [B, mb·block_size] of the compressed stream — still only the
+    2r·n_kv + d_ckv floats/token the paper pays for, never the full K/V."""
+    from repro.kernels.ref import elite_decode_paged_ref
+    return elite_decode_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                                  block_tables, lengths, q_group, scale,
+                                  block_size)

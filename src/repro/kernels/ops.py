@@ -27,6 +27,26 @@ def elite_decode(q_e, q_lat, k_e, c_k, c_v, lengths, q_group: int,
                             scale, block_s=block_s, interpret=_interpret())
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("q_group", "scale", "block_size", "force_xla"))
+def elite_decode_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                       block_tables, lengths, q_group: int, scale: float,
+                       block_size: int, force_xla: bool = False):
+    """Paged decode attention over the block pool.
+
+    TPU: Pallas kernel walking the prefetched block table (zero gather).
+    CPU / ``force_xla``: gather-based XLA fallback with identical semantics —
+    interpret-mode Pallas loops the grid in Python, far too slow to serve with.
+    """
+    if force_xla or _interpret():
+        return _ed.elite_decode_paged_xla(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, block_tables,
+            lengths, q_group, scale, block_size)
+    return _ed.elite_decode_paged(
+        q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, block_tables, lengths,
+        q_group, scale, block_size, interpret=False)
+
+
 @functools.partial(jax.jit, static_argnames=("q_group", "scale", "block_q", "block_k"))
 def flash_prefill(q, k, v, q_group: int, scale: float,
                   block_q: int = 256, block_k: int = 512):

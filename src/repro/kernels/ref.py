@@ -28,7 +28,34 @@ def elite_decode_ref(q_e, q_lat, k_e, c_k, c_v, lengths, q_group: int,
     valid = jnp.arange(S)[None, None, :] < lengths[:, None, None]
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
+    # length-0 sequences (empty serving slots) attend to nothing → zero output
+    # (softmax over an all-masked row would otherwise yield a uniform p)
+    p = jnp.where(lengths[:, None, None] > 0, p, 0.0)
     return jnp.einsum("bhk,bkc->bhc", p.astype(c_v.dtype), c_v)
+
+
+def elite_decode_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                           block_tables, lengths, q_group: int, scale: float,
+                           block_size: int) -> jnp.ndarray:
+    """Paged EliteKV decode attention: gather pages, then the dense oracle.
+
+    k_e_pages  [n_slots, nkv, 2r]   flat paged elite-key stream
+    c_k_pages  [n_slots, dc]        flat paged latent stream (K side)
+    c_v_pages  [n_slots, dc]        flat paged latent stream (V side)
+    block_tables [B, max_blocks] int32   per-sequence block chains (pad = 0)
+    lengths    [B] int32            live tokens per sequence (0 = empty slot)
+    n_slots = num_blocks · block_size; token t of logical position p lives in
+    flat slot  block_tables[b, p // block_size] · block_size + p % block_size.
+    →          [B, nh, dc]
+    """
+    B, mb = block_tables.shape
+
+    def gather(pages):
+        paged = pages.reshape((-1, block_size) + pages.shape[1:])
+        return paged[block_tables].reshape((B, mb * block_size) + pages.shape[1:])
+
+    return elite_decode_ref(q_e, q_lat, gather(k_e_pages), gather(c_k_pages),
+                            gather(c_v_pages), lengths, q_group, scale)
 
 
 def flash_prefill_ref(q, k, v, q_group: int, scale: float) -> jnp.ndarray:

@@ -111,7 +111,7 @@ def _logits(params, cfg, h, constrain=_NOOP):
 # ---------------------------------------------------------------------------
 
 def _run_layer(p, b, cfg, p_pos: int, h, positions, mode, cache, index,
-               moe_impl, mesh, constrain, data_axes=("data",)):
+               moe_impl, mesh, constrain, data_axes=("data",), paged=None):
     kind = cfg.layer_kind(p_pos)
     ffn_kind = cfg.ffn_kind(p_pos)
     aux = jnp.zeros((), jnp.float32)
@@ -125,9 +125,19 @@ def _run_layer(p, b, cfg, p_pos: int, h, positions, mode, cache, index,
             if mode == "train":
                 a = elite_attention.apply_full(p["attn"], cfg, b, hn, positions,
                                                constrain=constrain)
+            elif mode == "prefill" and paged is not None:
+                a, new_cache = elite_attention.apply_prefill_paged(
+                    p["attn"], cfg, b, hn, positions, cache,
+                    paged["slot_mapping"], constrain=constrain)
             elif mode == "prefill":
                 a, new_cache = elite_attention.apply_prefill(
                     p["attn"], cfg, b, hn, positions, cache, constrain=constrain)
+            elif paged is not None:
+                a, new_cache = elite_attention.apply_decode_paged(
+                    p["attn"], cfg, b, hn, cache, paged["slot_mapping"],
+                    paged["block_tables"], paged["lengths"],
+                    paged["block_size"], use_kernel=paged.get("use_kernel", True),
+                    constrain=constrain)
             else:
                 a, new_cache = elite_attention.apply_decode(
                     p["attn"], cfg, b, hn, index, cache, constrain=constrain)
@@ -165,7 +175,7 @@ def _run_layer(p, b, cfg, p_pos: int, h, positions, mode, cache, index,
 
 
 def _superblock(cfg, mode, moe_impl, mesh, constrain, positions, index,
-                data_axes=("data",)):
+                data_axes=("data",), paged=None):
     """Returns a scan body: (carry=(h, aux), xs=(params, buffers, cache)) → ..."""
 
     def body(carry, xs):
@@ -179,7 +189,8 @@ def _superblock(cfg, mode, moe_impl, mesh, constrain, positions, index,
                 caps[key] = rmsnorm(p_blk[key]["attn_norm"], h, cfg.norm_eps)
             h, aux, nc = _run_layer(
                 p_blk[key], b_blk.get(key, {}), cfg, p_pos, h, positions, mode,
-                cache_p, index, moe_impl, mesh, constrain, data_axes)
+                cache_p, index, moe_impl, mesh, constrain, data_axes,
+                paged=paged)
             aux_acc = aux_acc + aux
             if c_blk:
                 c_blk = dict(c_blk)
@@ -192,11 +203,11 @@ def _superblock(cfg, mode, moe_impl, mesh, constrain, positions, index,
 
 def _scan_blocks(params, buffers, cfg, h, positions, mode="train", cache=None,
                  index=None, moe_impl="ragged", mesh=None, constrain=_NOOP,
-                 capture: bool = False, data_axes=("data",)):
+                 capture: bool = False, data_axes=("data",), paged=None):
     P_ = cfg.block_period
     n_super = cfg.num_layers // P_
     body = _superblock(cfg, mode, moe_impl, mesh, constrain, positions, index,
-                       data_axes=data_axes)
+                       data_axes=data_axes, paged=paged)
     if cfg.remat:
         policy = {
             "dots": jax.checkpoint_policies.dots_saveable,
@@ -289,6 +300,56 @@ def apply_decode(params, buffers, cfg, batch, cache, moe_impl="ragged",
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = _logits(params, cfg, h, constrain)
     return logits, {"index": index + 1, "blocks": new_blocks}
+
+
+def apply_prefill_paged(params, buffers, cfg, batch, pages, slot_mapping,
+                        moe_impl="ragged", mesh=None, constrain=_NOOP,
+                        data_axes=("data",)):
+    """Prefill fresh sequences into the paged pool (continuous batching).
+
+    ``pages``: the pool's per-``p_pos`` stream dict (``PagedKVPool.pages``);
+    ``slot_mapping`` [B,S] flat pool slots per prompt token (padding → the
+    pool's out-of-bounds sentinel, dropped on write).  Prompts are assumed to
+    start at position 0.  → (logits [B,S,V], new_pages).
+    """
+    assert cfg.elitekv.enabled, "paged serving requires an EliteKV cache"
+    h = _embed_inputs(params, cfg, batch, cfg.dtype)
+    h = constrain("embed", h)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    h, aux, new_pages = _scan_blocks(
+        params, buffers, cfg, h, positions, mode="prefill",
+        cache={"blocks": pages}, moe_impl=moe_impl, mesh=mesh,
+        constrain=constrain, data_axes=data_axes,
+        paged={"slot_mapping": slot_mapping})
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return _logits(params, cfg, h, constrain), new_pages
+
+
+def apply_decode_paged(params, buffers, cfg, batch, pages, slot_mapping,
+                       block_tables, lengths, block_size: int,
+                       use_kernel: bool = True, moe_impl="ragged", mesh=None,
+                       constrain=_NOOP, data_axes=("data",)):
+    """One decode step for every serving slot, reading/writing pool pages.
+
+    ``lengths`` [B] int32: live length *including* this token (0 = idle lane);
+    ``slot_mapping`` [B] flat write slot for the new token; ``block_tables``
+    [B, max_blocks].  Shapes are slot-count-static, so one jit covers the
+    whole serving run regardless of which lanes are live.
+    → (logits [B,1,V], new_pages).
+    """
+    assert cfg.elitekv.enabled, "paged serving requires an EliteKV cache"
+    h = embed(params["embed"], batch["tokens"], cfg.dtype) if cfg.frontend != "audio" \
+        else batch["frames"].astype(cfg.dtype)
+    paged = {"slot_mapping": slot_mapping, "block_tables": block_tables,
+             "lengths": lengths, "block_size": block_size,
+             "use_kernel": use_kernel}
+    h, aux, new_pages = _scan_blocks(
+        params, buffers, cfg, h, None, mode="decode",
+        cache={"blocks": pages}, moe_impl=moe_impl, mesh=mesh,
+        constrain=constrain, data_axes=data_axes, paged=paged)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return _logits(params, cfg, h, constrain), new_pages
 
 
 def capture_attn_inputs(params, buffers, cfg, batch, moe_impl="ragged", mesh=None):

@@ -1,9 +1,30 @@
-"""Serving runtime: prefill + decode step factories and a batched request
-loop over the compressed EliteKV cache (continuous-batching style slots).
+"""Serving runtime over the compressed EliteKV cache.
+
+Two tiers:
+
+* ``generate`` — lockstep batched greedy decoding with a contiguous cache
+  (examples / parity oracle).
+* ``Scheduler`` — continuous batching over the block-paged pool
+  (``core.cache.PagedKVPool``): requests queue with arrival times, get
+  admitted into free *slots* mid-flight, are prefilled while resident slots
+  keep decoding, and retire on EOS or token budget — their blocks recycle
+  immediately.  Decode runs one jit-compiled step over all ``max_slots``
+  lanes regardless of occupancy (idle lanes are masked by length 0), so the
+  whole serving run compiles exactly once per prompt-length bucket plus once
+  for decode.
+
+Admission reserves *watermark* capacity (worst-case remaining blocks of every
+resident sequence) so a decode step can never run out of pool blocks
+mid-flight; physical blocks are still allocated on demand, one at a time, so
+peak usage stays far below the sum of per-request worst cases whenever
+arrivals stagger or sequences stop early.  Preemption/swap-out is a ROADMAP
+item.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -11,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.cache import OutOfBlocks, PagedKVPool
 from repro.models import lm
 
 
@@ -72,3 +94,286 @@ def generate(params, buffers, cfg: ModelConfig, prompts: jnp.ndarray,
     stats = ServeStats(prefill_tokens=B * Sp, decoded_tokens=B * max_new_tokens,
                        cache_bytes=measured_cache_bytes(cache, B, max_len)["attn_bytes"])
     return np.stack([np.asarray(o) for o in outs], axis=1), stats
+
+
+# ---------------------------------------------------------------------------
+# continuous batching over the paged pool
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival`` is in scheduler steps (the
+    simulated clock) — the Poisson driver maps wall arrival times onto it."""
+    uid: int
+    prompt: np.ndarray                    # [Sp] int32
+    max_new_tokens: int
+    arrival: float = 0.0
+    # filled in by the scheduler:
+    generated: List[int] = dataclasses.field(default_factory=list)
+    submit_wall: float = 0.0
+    first_token_wall: float = 0.0
+    first_token_step: int = -1
+    finish_step: int = -1
+    finish_reason: str = ""               # "eos" | "budget"
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_slots: int = 4                    # concurrent sequences per decode step
+    block_size: int = 16                  # tokens per pool block
+    num_blocks: int = 128                 # pool capacity
+    max_new_tokens: int = 64              # hard per-request generation cap
+    max_len: int = 256                    # per-sequence token cap (table width)
+    eos_id: Optional[int] = None
+    prefill_bucket: int = 16              # prompts pad up to a multiple of this
+    use_kernel: bool = True               # Pallas paged kernel on TPU
+    cache_dtype: Any = jnp.float32
+
+    @property
+    def max_blocks_per_seq(self) -> int:
+        return -(-self.max_len // self.block_size)
+
+
+@dataclasses.dataclass
+class ServeReport:
+    completed: int = 0
+    decode_steps: int = 0
+    prefill_tokens: int = 0
+    decoded_tokens: int = 0
+    wall_s: float = 0.0
+    tok_per_s: float = 0.0
+    ttft_steps_mean: float = 0.0
+    ttft_wall_p50_ms: float = 0.0
+    ttft_wall_p95_ms: float = 0.0
+    step_ms_p50: float = 0.0
+    step_ms_p95: float = 0.0
+    peak_slots: int = 0
+    pool_high_water_blocks: int = 0
+    pool_block_size: int = 0
+    naive_blocks: int = 0                 # Σ per-request worst-case blocks
+    block_reuse_ratio: float = 0.0        # naive / high-water (>1 ⇒ paging won)
+
+    def summary(self) -> str:
+        return (f"completed={self.completed} steps={self.decode_steps} "
+                f"decoded={self.decoded_tokens} tok/s={self.tok_per_s:.1f} "
+                f"ttft_steps={self.ttft_steps_mean:.1f} "
+                f"ttft_ms p50/p95={self.ttft_wall_p50_ms:.0f}/{self.ttft_wall_p95_ms:.0f} "
+                f"step_ms p50/p95={self.step_ms_p50:.1f}/{self.step_ms_p95:.1f} "
+                f"peak_slots={self.peak_slots} "
+                f"blocks high-water/naive={self.pool_high_water_blocks}/"
+                f"{self.naive_blocks} reuse×{self.block_reuse_ratio:.2f}")
+
+
+class Scheduler:
+    """Continuous-batching serving loop over the paged compressed cache."""
+
+    def __init__(self, params, buffers, cfg: ModelConfig,
+                 scfg: SchedulerConfig, mesh=None, moe_impl: str = "ragged"):
+        assert cfg.elitekv.enabled, "paged serving requires an EliteKV config"
+        self.params, self.buffers, self.cfg, self.scfg = params, buffers, cfg, scfg
+        self.pool = PagedKVPool(cfg, scfg.num_blocks, scfg.block_size,
+                                dtype=scfg.cache_dtype)
+        self.slots: List[Optional[Request]] = [None] * scfg.max_slots
+        self.waiting: collections.deque = collections.deque()
+        self.finished: List[Request] = []
+        self.t = 0                          # simulated clock (decode steps)
+        self._reserved_blocks = 0           # watermark: worst-case growth of residents
+        self._step_wall_ms: List[float] = []
+        self.peak_slots = 0
+        self.naive_blocks = 0
+
+        def _prefill(params, buffers, tokens, pages, slot_mapping):
+            return lm.apply_prefill_paged(params, buffers, cfg,
+                                          {"tokens": tokens}, pages,
+                                          slot_mapping, moe_impl=moe_impl,
+                                          mesh=mesh)
+
+        def _decode(params, buffers, tokens, pages, slot_mapping,
+                    block_tables, lengths):
+            return lm.apply_decode_paged(params, buffers, cfg,
+                                         {"tokens": tokens}, pages,
+                                         slot_mapping, block_tables, lengths,
+                                         block_size=scfg.block_size,
+                                         use_kernel=scfg.use_kernel,
+                                         moe_impl=moe_impl, mesh=mesh)
+
+        # donate the pages so XLA updates the pool in place rather than
+        # copying every block each step (donation is unsupported + noisy on CPU)
+        donate = () if jax.default_backend() == "cpu" else (3,)
+        self._prefill = jax.jit(_prefill, donate_argnums=donate)
+        self._decode = jax.jit(_decode, donate_argnums=donate)
+
+    # -- request intake -----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.max_new_tokens = min(req.max_new_tokens, self.scfg.max_new_tokens)
+        assert len(req.prompt) + req.max_new_tokens <= self.scfg.max_len, \
+            (len(req.prompt), req.max_new_tokens, self.scfg.max_len)
+        if self._worst_case_blocks(req) > self.scfg.num_blocks:
+            raise OutOfBlocks(
+                f"request {req.uid} needs {self._worst_case_blocks(req)} blocks "
+                f"worst-case but the pool only has {self.scfg.num_blocks} — "
+                f"it could never be admitted")
+        req.submit_wall = time.perf_counter()
+        self.waiting.append(req)
+        self.naive_blocks += self._worst_case_blocks(req)
+
+    def _worst_case_blocks(self, req: Request) -> int:
+        return -(-(len(req.prompt) + req.max_new_tokens) // self.scfg.block_size)
+
+    def _recompute_reserved(self) -> None:
+        """Watermark: worst-case blocks still owed to resident sequences.
+        Admission against ``num_free - reserved`` guarantees decode can always
+        grow every resident by its full budget — no mid-flight OutOfBlocks."""
+        self._reserved_blocks = sum(
+            max(0, self._worst_case_blocks(s) - len(self.pool.block_table(s.uid)))
+            for s in self.slots if s is not None)
+
+    # -- admission ----------------------------------------------------------
+    def _try_admit(self) -> int:
+        admitted = 0
+        self._recompute_reserved()
+        while self.waiting and self.waiting[0].arrival <= self.t:
+            slot = next((i for i, s in enumerate(self.slots) if s is None), None)
+            if slot is None:
+                break
+            req = self.waiting[0]
+            need = self._worst_case_blocks(req)
+            if self.pool.allocator.num_free - self._reserved_blocks < need:
+                break                       # pool watermark exhausted — wait
+            self.waiting.popleft()
+            self._admit(slot, req)
+            self._recompute_reserved()
+            admitted += 1
+        return admitted
+
+    def _admit(self, slot: int, req: Request) -> None:
+        scfg = self.scfg
+        sp = len(req.prompt)
+        pad = -(-sp // scfg.prefill_bucket) * scfg.prefill_bucket
+        self.pool.ensure_capacity(req.uid, sp)
+        tokens = np.zeros((1, pad), np.int32)
+        tokens[0, :sp] = req.prompt
+        sm = self.pool.prefill_slot_mapping(req.uid, 0, sp, pad)[None]
+        logits, self.pool.pages = self._prefill(self.params, self.buffers,
+                                                jnp.asarray(tokens),
+                                                self.pool.pages,
+                                                jnp.asarray(sm))
+        first = int(jnp.argmax(logits[0, sp - 1]))
+        req.generated.append(first)
+        req.first_token_wall = time.perf_counter()
+        req.first_token_step = self.t
+        self.slots[slot] = req
+        self._maybe_finish(slot, first)
+
+    # -- retirement ---------------------------------------------------------
+    def _maybe_finish(self, slot: int, token: int) -> None:
+        req = self.slots[slot]
+        if self.scfg.eos_id is not None and token == self.scfg.eos_id:
+            req.finish_reason = "eos"
+        elif len(req.generated) >= req.max_new_tokens:
+            req.finish_reason = "budget"
+        else:
+            return
+        req.finish_step = self.t
+        self.pool.free_seq(req.uid)         # blocks recycle immediately
+        self.finished.append(req)
+        self.slots[slot] = None
+
+    # -- one scheduler iteration -------------------------------------------
+    def step(self) -> bool:
+        """Admit + decode once.  Returns False when fully drained."""
+        self._try_admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        self.peak_slots = max(self.peak_slots, len(active))
+        if not active:
+            if not self.waiting:
+                return False
+            self.t += 1                     # idle tick: wait for next arrival
+            return True
+
+        scfg = self.scfg
+        B = scfg.max_slots
+        tokens = np.zeros((B, 1), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        seq_ids: List[Optional[int]] = [None] * B
+        positions = [0] * B
+        for i in active:
+            req = self.slots[i]
+            cur = self.pool.length(req.uid)
+            self.pool.ensure_capacity(req.uid, cur + 1)   # may grow one block
+            tokens[i, 0] = req.generated[-1]
+            lengths[i] = cur + 1
+            seq_ids[i] = req.uid
+            positions[i] = cur
+        sm = self.pool.slot_mapping(seq_ids, positions)
+        bt = self.pool.block_table_array(seq_ids, scfg.max_blocks_per_seq)
+
+        t0 = time.perf_counter()
+        logits, self.pool.pages = self._decode(self.params, self.buffers,
+                                               jnp.asarray(tokens),
+                                               self.pool.pages,
+                                               jnp.asarray(sm), jnp.asarray(bt),
+                                               jnp.asarray(lengths))
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        self._step_wall_ms.append((time.perf_counter() - t0) * 1e3)
+        self.t += 1
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i])
+            req.generated.append(tok)
+            self._maybe_finish(i, tok)
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    # -- drive to completion ------------------------------------------------
+    def run(self, requests: Optional[List[Request]] = None,
+            max_steps: int = 100_000) -> ServeReport:
+        for r in requests or []:
+            self.submit(r)
+        t0 = time.perf_counter()
+        steps = 0
+        while self.step():
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"scheduler did not drain in {max_steps} steps")
+        return self.report(time.perf_counter() - t0)
+
+    def report(self, wall_s: float) -> ServeReport:
+        fin = self.finished
+        decoded = sum(len(r.generated) for r in fin)
+        prefill_toks = sum(len(r.prompt) for r in fin)
+        ttft_steps = [r.first_token_step - r.arrival for r in fin]
+        ttft_ms = [(r.first_token_wall - r.submit_wall) * 1e3 for r in fin]
+        pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
+        hw = self.pool.allocator.high_water
+        return ServeReport(
+            completed=len(fin), decode_steps=len(self._step_wall_ms),
+            prefill_tokens=prefill_toks, decoded_tokens=decoded,
+            wall_s=wall_s, tok_per_s=decoded / max(wall_s, 1e-9),
+            ttft_steps_mean=float(np.mean(ttft_steps)) if ttft_steps else 0.0,
+            ttft_wall_p50_ms=pct(ttft_ms, 50), ttft_wall_p95_ms=pct(ttft_ms, 95),
+            step_ms_p50=pct(self._step_wall_ms, 50),
+            step_ms_p95=pct(self._step_wall_ms, 95),
+            peak_slots=self.peak_slots, pool_high_water_blocks=hw,
+            pool_block_size=self.scfg.block_size,
+            naive_blocks=self.naive_blocks,
+            block_reuse_ratio=self.naive_blocks / max(hw, 1))
+
+
+def generate_paged(params, buffers, cfg: ModelConfig, prompts: jnp.ndarray,
+                   max_new_tokens: int, scfg: Optional[SchedulerConfig] = None
+                   ) -> Tuple[np.ndarray, ServeReport]:
+    """Paged-pool twin of ``generate`` (same greedy semantics, same output
+    shape) — the parity surface for scheduler tests."""
+    B, Sp = prompts.shape
+    scfg = scfg or SchedulerConfig(
+        max_slots=B, max_new_tokens=max_new_tokens,
+        max_len=Sp + max_new_tokens + 1,
+        num_blocks=2 * B * (-(-(Sp + max_new_tokens) // 16)), block_size=16)
+    sched = Scheduler(params, buffers, cfg, scfg)
+    reqs = [Request(uid=i, prompt=np.asarray(prompts[i]),
+                    max_new_tokens=max_new_tokens) for i in range(B)]
+    report = sched.run(reqs)
+    out = np.zeros((B, max_new_tokens), np.int32)
+    for r in sched.finished:
+        out[r.uid, :len(r.generated)] = r.generated
+    return out, report

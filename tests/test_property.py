@@ -1,10 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skipped wholesale when ``hypothesis`` is absent (the CI image installs it;
+bare containers must still *collect* this module without error).
+"""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import rope as rope_lib

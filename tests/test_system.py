@@ -11,9 +11,20 @@ import pytest
 from repro.configs import get_config
 from repro.configs.base import EliteKVConfig
 from repro.core import convert
-from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.data.pipeline import DataConfig, PipelineState, TokenPipeline
 from repro.models import lm
 from repro.runtime import serve_loop, train_loop
+
+
+def _eval_loss(params, buffers, cfg, n_batches=4):
+    """Held-out loss: same seed-0 Markov corpus, pipeline steps the training
+    stream never reaches.  Averaged over batches — single-batch train losses
+    are too noisy to gate a recovery assertion on."""
+    d = iter(TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                      batch_size=4, seed=0),
+                           state=PipelineState(step=1000)))
+    return float(np.mean([float(lm.loss_fn(params, buffers, cfg, next(d))[0])
+                          for _ in range(n_batches)]))
 
 
 @pytest.fixture(scope="module")
@@ -29,6 +40,7 @@ def pipeline_result():
     params, _, hist = train_loop.train(params, buffers, cfg, tc, iter(data),
                                        60, log_every=5)
     base_loss = hist[-1][1]
+    base_eval = _eval_loss(params, buffers, cfg)
 
     calib = next(iter(TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
                                                seq_len=32, batch_size=2, seed=9))))
@@ -38,12 +50,15 @@ def pipeline_result():
     data2 = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                      batch_size=4, seed=0))
     conv_loss0 = float(lm.loss_fn(ep, eb, ecfg, next(iter(data2)))[0])
+    conv_eval = _eval_loss(ep, eb, ecfg)
     data3 = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                      batch_size=4, seed=0))
-    ep, _, hist2 = train_loop.train(ep, eb, ecfg, tc, iter(data3), 80, log_every=5)
+    ep, _, hist2 = train_loop.train(ep, eb, ecfg, tc, iter(data3), 160, log_every=5)
     return dict(cfg=cfg, ecfg=ecfg, params=params, buffers=buffers, ep=ep, eb=eb,
-                base_loss=base_loss, conv_loss0=conv_loss0,
-                uptrained_loss=hist2[-1][1])
+                base_loss=base_loss, base_eval=base_eval,
+                conv_loss0=conv_loss0, conv_eval=conv_eval,
+                uptrained_loss=hist2[-1][1],
+                uptrained_eval=_eval_loss(ep, eb, ecfg))
 
 
 def test_baseline_trains(pipeline_result):
@@ -52,11 +67,19 @@ def test_baseline_trains(pipeline_result):
 
 
 def test_uptraining_recovers(pipeline_result):
-    """Paper Fig. 6 mechanism: conversion hurts, uptraining recovers most."""
+    """Paper Fig. 6 mechanism: conversion hurts, uptraining recovers most.
+
+    Measured on a fixed held-out slice of the training corpus, averaged over
+    batches, with a *relative* improvement bound — a raw ``uptrained <
+    converted`` on single-batch train losses sat within training noise
+    (failed the seed by 0.003) and said nothing about recovery.
+    """
     r = pipeline_result
     assert r["conv_loss0"] > r["base_loss"]          # surgery costs something
-    assert r["uptrained_loss"] < r["conv_loss0"]     # uptraining recovers
-    assert r["uptrained_loss"] < r["base_loss"] + 0.5
+    # uptraining recovers ≥1% of held-out loss (measured ≈2.6% at 160 steps)
+    rel_gain = (r["conv_eval"] - r["uptrained_eval"]) / r["conv_eval"]
+    assert rel_gain > 0.01, (r["conv_eval"], r["uptrained_eval"])
+    assert r["uptrained_eval"] < r["base_eval"] + 0.25  # lands near baseline
 
 
 def test_cache_is_quarter(pipeline_result):
