@@ -266,31 +266,41 @@ def serving():
         cfg, elitekv=EliteKVConfig(enabled=True, elite_r=4, d_ckv=64))
     params, buffers = lm.init(jax.random.PRNGKey(0), cfg)
 
-    for rate, tag in [(2.0, "bursty"), (0.4, "trickle")]:
+    def workload(rate):
+        """Bimodal prompt lengths: short interactive requests racing long
+        ones — the case chunked prefill exists for."""
         rng = np.random.default_rng(7)
-        scfg = serve_loop.SchedulerConfig(
-            max_slots=4, block_size=8, num_blocks=96,
-            max_new_tokens=24, max_len=64, prefill_bucket=8)
-        sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
         t, reqs = 0.0, []
         for i in range(12):
             t += rng.exponential(1.0 / rate)
+            sp = int(rng.integers(4, 9)) if i % 2 else int(rng.integers(24, 41))
             reqs.append(serve_loop.Request(
                 uid=i,
-                prompt=rng.integers(0, cfg.vocab_size,
-                                    int(rng.integers(4, 25))).astype(np.int32),
-                max_new_tokens=int(rng.integers(4, 25)), arrival=t))
-        t0 = time.time()
-        rep = sched.run(reqs)
-        us = (time.time() - t0) * 1e6 / max(rep.decode_steps, 1)
-        emit(f"serving/poisson_{tag}", us,
-             f"tok_s={rep.tok_per_s:.1f};ttft_steps={rep.ttft_steps_mean:.1f};"
-             f"step_ms_p50={rep.step_ms_p50:.1f};step_ms_p95={rep.step_ms_p95:.1f};"
-             f"peak_slots={rep.peak_slots};"
-             f"blocks_hw={rep.pool_high_water_blocks};"
-             f"blocks_naive={rep.naive_blocks};"
-             f"reuse={rep.block_reuse_ratio:.2f};"
-             f"paged_beats_naive={rep.pool_high_water_blocks < rep.naive_blocks}")
+                prompt=rng.integers(0, cfg.vocab_size, sp).astype(np.int32),
+                max_new_tokens=int(rng.integers(4, 17)), arrival=t))
+        return reqs
+
+    for rate, tag in [(2.0, "bursty"), (0.4, "trickle")]:
+        for chunk in (0, 8):               # one-shot admission vs chunked
+            scfg = serve_loop.SchedulerConfig(
+                max_slots=4, block_size=8, num_blocks=96,
+                max_new_tokens=16, max_len=64, prefill_bucket=8,
+                prefill_chunk_tokens=chunk)
+            sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+            t0 = time.time()
+            rep = sched.run(workload(rate))
+            us = (time.time() - t0) * 1e6 / max(rep.decode_steps, 1)
+            buckets = ";".join(f"ttft_prompt_{k}={v:.1f}"
+                               for k, v in rep.ttft_steps_by_bucket.items())
+            emit(f"serving/poisson_{tag}_chunk{chunk}", us,
+                 f"tok_s={rep.tok_per_s:.1f};ttft_steps={rep.ttft_steps_mean:.1f};"
+                 f"{buckets};prefill_chunks={rep.prefill_chunks};"
+                 f"step_ms_p50={rep.step_ms_p50:.1f};step_ms_p95={rep.step_ms_p95:.1f};"
+                 f"peak_slots={rep.peak_slots};"
+                 f"blocks_hw={rep.pool_high_water_blocks};"
+                 f"blocks_naive={rep.naive_blocks};"
+                 f"reuse={rep.block_reuse_ratio:.2f};"
+                 f"paged_beats_naive={rep.pool_high_water_blocks < rep.naive_blocks}")
 
 
 ALL = {"table1": table1, "table2": table2, "fig5": fig5, "fig6": fig6,

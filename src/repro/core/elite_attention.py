@@ -261,13 +261,70 @@ def _page_latents(pages):
     return pages["c_k"], pages["c_v"]
 
 
-def apply_prefill_paged(params, cfg, buffers, x, positions, pages,
-                        slot_mapping, constrain=lambda n, t: t):
-    """Prefill fresh sequences and scatter their streams into pool pages.
+def _gather_prefix(pages, params, cfg, block_tables, block_size: int, dt):
+    """Materialize K/V for a sequence's cached *prefix* from pool pages.
 
-    A fresh sequence has no prior context, so attention is ordinary causal
-    self-attention over the (padded) prompt; only the cache *write* is paged.
-    x [B,S,d]; slot_mapping [B,S] flat pool slots (pad positions → sentinel).
+    block_tables [B, mb] → K_pre [B, mb·bs, nkv, dh], V_pre [B, mb·bs, nkv, dh].
+    Positions past the live prefix length land on pool blocks owned by other
+    sequences (or the pad block 0) — the caller masks them by ``prefix_lens``.
+    The gather reads only the compressed 2r·n_kv + d_ckv floats/token and
+    up-projects through bk/bv, mirroring ``kernels.ops.elite_decode_paged``'s
+    XLA fallback.
+    """
+    B, mb = block_tables.shape
+
+    def gather(stream):
+        paged = stream.reshape((-1, block_size) + stream.shape[1:])
+        return paged[block_tables].reshape((B, mb * block_size) + stream.shape[1:])
+
+    k_e_pre = gather(pages["k_e"]).astype(dt)                # [B,P,nkv,2r]
+    c_k_pre, c_v_pre = _page_latents(pages)
+    c_k_pre, c_v_pre = gather(c_k_pre).astype(dt), gather(c_v_pre).astype(dt)
+    k_ne_pre = jnp.einsum("bsc,che->bshe", c_k_pre, params["bk"].astype(dt))
+    v_pre = jnp.einsum("bsc,che->bshe", c_v_pre, params["bv"].astype(dt))
+    return jnp.concatenate([k_e_pre, k_ne_pre], axis=-1), v_pre
+
+
+def _attend_resumed(q, k_pre, v_pre, k_cur, v_cur, prefix_lens, q_group: int,
+                    scale: float, constrain=lambda n, t: t):
+    """Attention for a resumed prefill chunk: queries see the cached prefix
+    (key j valid iff j < prefix_len — the gather window is padded with foreign
+    blocks) plus the current chunk causally.  q/k_cur/v_cur [B,S,*,dh],
+    k_pre/v_pre [B,P,nkv,dh], prefix_lens [B] int32.  → [B,S,nh,dh]."""
+    B, S = q.shape[:2]
+    P = k_pre.shape[1]
+    k = jnp.concatenate([k_pre, k_cur], axis=1)
+    v = jnp.concatenate([v_pre, v_cur], axis=1)
+    if q_group > 1:
+        k = constrain("heads4", jnp.repeat(k, q_group, axis=2))
+        v = constrain("heads4", jnp.repeat(v, q_group, axis=2))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    pre_ok = jnp.arange(P)[None, :] < prefix_lens[:, None]   # [B,P]
+    cur_ok = jnp.tril(jnp.ones((S, S), bool))                # within-chunk causal
+    mask = jnp.concatenate([
+        jnp.broadcast_to(pre_ok[:, None, :], (B, S, P)),
+        jnp.broadcast_to(cur_ok[None], (B, S, S))], axis=-1) # [B,S,P+S]
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def apply_prefill_paged(params, cfg, buffers, x, positions, pages,
+                        slot_mapping, block_tables=None, prefix_lens=None,
+                        block_size: int = 0, constrain=lambda n, t: t):
+    """Prefill a (chunk of a) sequence and scatter its streams into pool pages.
+
+    Fresh sequences (``block_tables is None``): no prior context, so attention
+    is ordinary causal self-attention over the (padded) prompt; only the cache
+    *write* is paged.  x [B,S,d]; slot_mapping [B,S] flat pool slots (pad
+    positions → sentinel).
+
+    Resumed chunks (chunked prefill): ``positions`` carry the chunk's global
+    offsets, ``block_tables`` [B,mb] + ``prefix_lens`` [B] locate the already-
+    cached prefix, which is gathered from the pool, up-projected through
+    bk/bv, and attended with the offset causal mask (the XLA analogue of
+    ``flash_prefill``'s ``q_offset``; see docs/serving.md).
     → (out [B,S,d], new_pages)
     """
     from repro.models.attention import _attend
@@ -278,9 +335,15 @@ def apply_prefill_paged(params, cfg, buffers, x, positions, pages,
         pages, k_e.reshape(B * S, *k_e.shape[2:]),
         c_k.reshape(B * S, -1), c_v.reshape(B * S, -1),
         slot_mapping.reshape(B * S))
-    o = _attend(q, k, v, cfg.q_group, cfg.head_dim ** -0.5,
-                chunk_q=cfg.attn_chunk_q, constrain=constrain,
-                unroll=cfg.attn_chunk_unroll)
+    if block_tables is None:
+        o = _attend(q, k, v, cfg.q_group, cfg.head_dim ** -0.5,
+                    chunk_q=cfg.attn_chunk_q, constrain=constrain,
+                    unroll=cfg.attn_chunk_unroll)
+    else:
+        k_pre, v_pre = _gather_prefix(pages, params, cfg, block_tables,
+                                      block_size, x.dtype)
+        o = _attend_resumed(q, k_pre, v_pre, k, v, prefix_lens, cfg.q_group,
+                            cfg.head_dim ** -0.5, constrain=constrain)
     return jnp.einsum("bshe,hed->bsd", o, params["wo"].astype(x.dtype)), new_pages
 
 

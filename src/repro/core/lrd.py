@@ -10,6 +10,10 @@ S-LRD (ablation): factorize W^k_nonelite and W^v separately with ranks
 the error-minimizing (d_ck, d_cv) under a fixed cache budget from the two
 singular spectra (the paper used a greedy search; with the spectra in hand the
 split is solved exactly).
+
+Stage 2 of docs/architecture.md: the factors produced here become the
+``a_kv`` / ``bk`` / ``bv`` weights whose latent stream the paged cache stores
+and the decode kernel (kernels/elite_decode.py) reads.
 """
 from __future__ import annotations
 

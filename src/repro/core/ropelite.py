@@ -12,6 +12,10 @@ delta, s(M) − s(full) = −Σ_{c∉M} D_c =: −G(M).  The candidate distance 
 GQA generalization: elite sets live per **KV head**; candidate distances are
 summed over the query heads of the group (keys are shared, so the chunk choice
 must be, too).
+
+This is stage 1 of the pipeline in docs/architecture.md — the selected chunks
+decide which key dims stay rotary while the rest feed the joint low-rank
+latent (core/lrd.py).
 """
 from __future__ import annotations
 

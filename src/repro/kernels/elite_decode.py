@@ -18,6 +18,11 @@ VMEM tiling: grid (B, n_kv, S/block_s); per step the working set is
 block_s=512, d_c=512, bf16 → ~1.1 MB ≪ 16 MB VMEM.  d_c and block_s are
 128-multiples (MXU-aligned); the 2r rotary GEMM rides lane padding (≤64).
 Per-sequence lengths arrive via scalar prefetch (ragged serving batches).
+
+Final stage of the docs/architecture.md pipeline: the streams this kernel
+reads are produced by RoPElite selection (core/ropelite.py) + J-LRD
+factorization (core/lrd.py) and live in the paged pool docs/serving.md
+describes.
 """
 from __future__ import annotations
 

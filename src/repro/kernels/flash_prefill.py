@@ -1,7 +1,7 @@
 """Causal flash-attention Pallas kernel (prefill / training forward).
 
 Standard online-softmax tiling (FlashAttention adapted to TPU VMEM/MXU):
-grid (B, n_heads, S/block_q, S/block_k), sequential over the kv axis with
+grid (B, n_heads, Sq/block_q, Sk/block_k), sequential over the kv axis with
 fp32 accumulators in VMEM scratch.  Causal block-skipping via ``pl.when`` —
 blocks strictly above the diagonal are never touched, halving HBM traffic.
 
@@ -12,6 +12,15 @@ group size).
 Used at prefill for EliteKV models *after* the latent up-projection
 materializes K = [K_e | c·bk] and V = c·bv for the current chunk; training
 uses the same kernel via the materialized path.
+
+Resumed chunks (chunked prefill, see docs/serving.md): a chunk of queries at
+global positions ``q_offset .. q_offset+Sq`` attends to keys at positions
+``0 .. Sk`` — the mask becomes ``kpos <= qpos + q_offset`` and the causal
+block skip shifts by the same offset.  ``q_offset`` is static (one compile
+per chunk/context shape).  NOTE: the paged serving loop currently resumes
+chunks through the XLA gather path (``elite_attention._attend_resumed``);
+wiring this kernel to the paged prefix via a contiguous gather scratch is
+the TPU follow-up tracked in ROADMAP.md.
 """
 from __future__ import annotations
 
@@ -26,7 +35,8 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-            *, block_q: int, block_k: int, scale: float, n_kb: int):
+            *, block_q: int, block_k: int, scale: float, n_kb: int,
+            q_offset: int):
     iq = pl.program_id(2)
     jk = pl.program_id(3)
 
@@ -36,8 +46,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    # causal skip: kv block strictly above the diagonal
-    @pl.when(jk * block_k <= iq * block_q + block_q - 1)
+    # causal skip: kv block strictly above the (offset) diagonal
+    @pl.when(jk * block_k <= iq * block_q + block_q - 1 + q_offset)
     def _step():
         q = q_ref[0, :, 0, :]                                # [bq, dh]
         k = k_ref[0, :, 0, :]                                # [bk, dh]
@@ -46,7 +56,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
                                 preferred_element_type=jnp.float32) * scale
         qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kpos = jk * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        s = jnp.where(kpos <= qpos + q_offset, s, NEG_INF)
 
         m_prev, l_prev = m_ref[...], l_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
@@ -66,19 +76,27 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 
 def flash_prefill(q, k, v, q_group: int, scale: float,
                   block_q: int = 256, block_k: int = 512,
-                  interpret: bool = False):
-    """Causal attention.  q [B,S,nh,dh], k/v [B,S,nkv,dh] → [B,S,nh,dh]."""
-    B, S, nh, dh = q.shape
+                  q_offset: int = 0, interpret: bool = False):
+    """Causal attention.  q [B,Sq,nh,dh], k/v [B,Sk,nkv,dh] → [B,Sq,nh,dh].
+
+    ``q_offset`` (static) shifts the causal diagonal: key ``j`` is visible to
+    query ``i`` iff ``j <= i + q_offset``.  A resumed prefill chunk passes its
+    start position so it attends to the whole cached prefix plus itself; the
+    default 0 with Sq == Sk is ordinary causal attention.
+    """
+    B, Sq, nh, dh = q.shape
+    Sk = k.shape[1]
     nkv = k.shape[2]
     assert nh == nkv * q_group
-    block_q = min(block_q, S)
-    block_k = min(block_k, S)
-    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
-    n_qb, n_kb = S // block_q, S // block_k
+    assert q_offset >= 0 and Sk >= Sq + q_offset, (Sq, Sk, q_offset)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    n_qb, n_kb = Sq // block_q, Sk // block_k
 
     out = pl.pallas_call(
         functools.partial(_kernel, block_q=block_q, block_k=block_k,
-                          scale=scale, n_kb=n_kb),
+                          scale=scale, n_kb=n_kb, q_offset=q_offset),
         grid=(B, nh, n_qb, n_kb),
         in_specs=[
             pl.BlockSpec((1, block_q, 1, dh), lambda b, h, i, j: (b, i, h, 0)),
@@ -88,7 +106,7 @@ def flash_prefill(q, k, v, q_group: int, scale: float,
                          lambda b, h, i, j, g=q_group: (b, j, h // g, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, 1, dh), lambda b, h, i, j: (b, i, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, S, nh, dh), v.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, nh, dh), v.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, dh), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),

@@ -47,11 +47,15 @@ def elite_decode_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
         q_group, scale, block_size, interpret=False)
 
 
-@functools.partial(jax.jit, static_argnames=("q_group", "scale", "block_q", "block_k"))
+@functools.partial(jax.jit, static_argnames=("q_group", "scale", "block_q",
+                                             "block_k", "q_offset"))
 def flash_prefill(q, k, v, q_group: int, scale: float,
-                  block_q: int = 256, block_k: int = 512):
+                  block_q: int = 256, block_k: int = 512, q_offset: int = 0):
+    """``q_offset`` > 0 resumes a prefill chunk against a longer key context
+    (chunked prefill, see docs/serving.md)."""
     return _fp.flash_prefill(q, k, v, q_group, scale, block_q=block_q,
-                             block_k=block_k, interpret=_interpret())
+                             block_k=block_k, q_offset=q_offset,
+                             interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("block_s",))

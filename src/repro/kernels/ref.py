@@ -58,17 +58,22 @@ def elite_decode_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
                             gather(c_v_pages), lengths, q_group, scale)
 
 
-def flash_prefill_ref(q, k, v, q_group: int, scale: float) -> jnp.ndarray:
-    """Causal attention oracle.  q [B,S,nh,dh], k/v [B,S,nkv,dh] → [B,S,nh,dh]."""
-    B, S, nh, dh = q.shape
-    nkv = k.shape[2]
-    qg = q.reshape(B, S, nkv, q_group, dh)
+def flash_prefill_ref(q, k, v, q_group: int, scale: float,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """Causal attention oracle.  q [B,Sq,nh,dh], k/v [B,Sk,nkv,dh] → [B,Sq,nh,dh].
+
+    ``q_offset`` shifts the causal diagonal (resumed prefill chunks): key j is
+    visible to query i iff j <= i + q_offset.
+    """
+    B, Sq, nh, dh = q.shape
+    Sk, nkv = k.shape[1], k.shape[2]
+    qg = q.reshape(B, Sq, nkv, q_group, dh)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32) * scale
-    mask = jnp.tril(jnp.ones((S, S), bool))
+    mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None] + q_offset
     s = jnp.where(mask[None, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
-    return o.reshape(B, S, nh, dh)
+    return o.reshape(B, Sq, nh, dh)
 
 
 def rope_elite_ref(x, positions, freqs) -> jnp.ndarray:

@@ -18,18 +18,23 @@ Request-stream mode — continuous batching over the paged pool:
 (``--rate`` requests per decode step, exponential inter-arrivals, seeded):
 prompt lengths and generation budgets are sampled per request, the
 ``runtime.serve_loop.Scheduler`` admits arrivals into free slots mid-flight,
-prefills them while resident slots keep decoding, retires sequences on EOS or
-budget, and recycles their pool blocks immediately.  The run ends by printing
-the scheduler metrics line:
+prefills their prompts in ``--prefill-chunk``-token chunks interleaved with
+decode steps (0 = whole prompt at admission), retires sequences on EOS or
+budget, and recycles their pool blocks immediately.  ``--temperature`` /
+``--top-p`` select per-request sampling (temperature 0 = greedy); each
+request gets the PRNG seed ``--sample-seed + uid``, so reruns reproduce
+token-for-token.  The run ends by printing the scheduler metrics line:
 
     completed / decode steps / decoded tokens / tok/s — throughput
-    ttft_steps, ttft_ms p50/p95          — time-to-first-token (sim + wall)
+    ttft_steps (+ per prompt-length bucket), ttft_ms p50/p95
+                                         — time-to-first-token (sim + wall)
     step_ms p50/p95                      — per-decode-step latency
     blocks high-water/naive, reuse×      — peak pool blocks vs the sum of
                                            per-request worst cases; reuse > 1
                                            is paging's memory win
 
 plus the pool accounting (live vs allocated bytes, block size, free blocks).
+docs/serving.md walks through every field.
 """
 from __future__ import annotations
 
@@ -56,7 +61,8 @@ def serve_stream(params, buffers, cfg, args):
         max_slots=args.max_slots, block_size=args.block_size,
         num_blocks=args.num_blocks, eos_id=args.eos_id,
         max_new_tokens=args.new_tokens,
-        max_len=args.prompt_len + args.new_tokens + 1)
+        max_len=args.prompt_len + args.new_tokens + 1,
+        prefill_chunk_tokens=args.prefill_chunk)
     sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
     p_lo = min(4, args.prompt_len)          # sampling floors, valid even for
     n_lo = min(4, args.new_tokens)          # --prompt-len/--new-tokens < 4
@@ -70,10 +76,15 @@ def serve_stream(params, buffers, cfg, args):
                                 int(rng.integers(p_lo, args.prompt_len + 1))
                                 ).astype(np.int32),
             max_new_tokens=int(rng.integers(n_lo, args.new_tokens + 1)),
-            arrival=t))
+            arrival=t,
+            temperature=args.temperature, top_p=args.top_p,
+            seed=args.sample_seed + i))
     report = sched.run(reqs)
     stats = sched.pool.stats()
     print(f"arch={cfg.name} stream: {report.summary()}")
+    if scfg.prefill_chunk_tokens:
+        print(f"chunked prefill: {report.prefill_chunks} chunks of "
+              f"<= {scfg.prefill_chunk_tokens} tokens interleaved with decode")
     print(f"pool: block_size={stats.block_size} blocks={stats.num_blocks} "
           f"high_water={report.pool_high_water_blocks} "
           f"free_after_drain={stats.blocks_free} "
@@ -105,6 +116,15 @@ def main(argv=None):
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=128)
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="per-step chunked-prefill token budget "
+                         "(0 = whole prompt at admission)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for stream requests (0 = greedy)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1 = full softmax)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base PRNG seed; request i samples with seed+i")
     args = ap.parse_args(argv)
 
     base = get_config(args.arch)

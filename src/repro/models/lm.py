@@ -128,7 +128,11 @@ def _run_layer(p, b, cfg, p_pos: int, h, positions, mode, cache, index,
             elif mode == "prefill" and paged is not None:
                 a, new_cache = elite_attention.apply_prefill_paged(
                     p["attn"], cfg, b, hn, positions, cache,
-                    paged["slot_mapping"], constrain=constrain)
+                    paged["slot_mapping"],
+                    block_tables=paged.get("block_tables"),
+                    prefix_lens=paged.get("prefix_lens"),
+                    block_size=paged.get("block_size", 0),
+                    constrain=constrain)
             elif mode == "prefill":
                 a, new_cache = elite_attention.apply_prefill(
                     p["attn"], cfg, b, hn, positions, cache, constrain=constrain)
@@ -303,25 +307,38 @@ def apply_decode(params, buffers, cfg, batch, cache, moe_impl="ragged",
 
 
 def apply_prefill_paged(params, buffers, cfg, batch, pages, slot_mapping,
-                        moe_impl="ragged", mesh=None, constrain=_NOOP,
-                        data_axes=("data",)):
-    """Prefill fresh sequences into the paged pool (continuous batching).
+                        chunk_start=None, block_tables=None, prefix_lens=None,
+                        block_size: int = 0, moe_impl="ragged", mesh=None,
+                        constrain=_NOOP, data_axes=("data",)):
+    """Prefill sequences (or chunks of them) into the paged pool.
 
     ``pages``: the pool's per-``p_pos`` stream dict (``PagedKVPool.pages``);
     ``slot_mapping`` [B,S] flat pool slots per prompt token (padding → the
-    pool's out-of-bounds sentinel, dropped on write).  Prompts are assumed to
-    start at position 0.  → (logits [B,S,V], new_pages).
+    pool's out-of-bounds sentinel, dropped on write).
+
+    One-shot mode (default): prompts start at position 0 and attend causally
+    to themselves only.
+
+    Chunked mode (``chunk_start`` given — a traced scalar, so one jit covers
+    every chunk): tokens sit at global positions ``chunk_start + i``; RoPE is
+    applied at those positions and attention additionally sees the sequence's
+    already-cached prefix, located by ``block_tables`` [B,mb] /
+    ``prefix_lens`` [B] / static ``block_size``.  → (logits [B,S,V], new_pages).
     """
     assert cfg.elitekv.enabled, "paged serving requires an EliteKV cache"
     h = _embed_inputs(params, cfg, batch, cfg.dtype)
     h = constrain("embed", h)
     S = h.shape[1]
     positions = jnp.arange(S)
+    paged = {"slot_mapping": slot_mapping}
+    if chunk_start is not None:
+        positions = positions + chunk_start
+        paged.update(block_tables=block_tables, prefix_lens=prefix_lens,
+                     block_size=block_size)
     h, aux, new_pages = _scan_blocks(
         params, buffers, cfg, h, positions, mode="prefill",
         cache={"blocks": pages}, moe_impl=moe_impl, mesh=mesh,
-        constrain=constrain, data_axes=data_axes,
-        paged={"slot_mapping": slot_mapping})
+        constrain=constrain, data_axes=data_axes, paged=paged)
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     return _logits(params, cfg, h, constrain), new_pages
 

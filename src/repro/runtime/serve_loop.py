@@ -1,4 +1,4 @@
-"""Serving runtime over the compressed EliteKV cache.
+"""Serving runtime over the compressed EliteKV cache (see docs/serving.md).
 
 Two tiers:
 
@@ -6,12 +6,20 @@ Two tiers:
   (examples / parity oracle).
 * ``Scheduler`` — continuous batching over the block-paged pool
   (``core.cache.PagedKVPool``): requests queue with arrival times, get
-  admitted into free *slots* mid-flight, are prefilled while resident slots
-  keep decoding, and retire on EOS or token budget — their blocks recycle
-  immediately.  Decode runs one jit-compiled step over all ``max_slots``
-  lanes regardless of occupancy (idle lanes are masked by length 0), so the
-  whole serving run compiles exactly once per prompt-length bucket plus once
-  for decode.
+  admitted into free *slots* mid-flight, prefill their prompts in fixed-size
+  token **chunks** interleaved with decode steps (so a long arriving prompt
+  never stalls resident sequences), and retire on EOS or token budget — their
+  blocks recycle immediately.  Each scheduler step spends at most
+  ``prefill_chunk_tokens`` prompt tokens on chunked prefill before running
+  one decode step over all ``max_slots`` lanes (idle and still-prefilling
+  lanes are masked by length 0); with ``prefill_chunk_tokens=0`` the whole
+  prompt is prefilled at admission in one call (PR-2 behaviour).  The run
+  compiles once per prompt-length bucket (one-shot), once for the fixed
+  chunk shape (chunked), plus once for decode.
+
+Decoding samples per request: temperature / nucleus (top-p) with a
+per-request PRNG seed, applied batched over all lanes in one jitted call;
+``temperature=0`` lanes reduce exactly to greedy argmax.
 
 Admission reserves *watermark* capacity (worst-case remaining blocks of every
 resident sequence) so a decode step can never run out of pool blocks
@@ -67,6 +75,15 @@ def make_decode_step(cfg: ModelConfig, mesh=None, constrain=None,
 
 @dataclasses.dataclass
 class ServeStats:
+    """Counters for the lockstep ``generate`` path.
+
+    ``prefill_tokens``  — prompt tokens pushed through the prefill forward
+                          (batch × prompt length).
+    ``decoded_tokens``  — tokens produced by decode steps (batch × new tokens).
+    ``cache_bytes``     — measured bytes of the attention KV cache actually
+                          allocated for the run (the paper's headline
+                          compression shows up here).
+    """
     prefill_tokens: int = 0
     decoded_tokens: int = 0
     cache_bytes: int = 0
@@ -103,13 +120,23 @@ def generate(params, buffers, cfg: ModelConfig, prompts: jnp.ndarray,
 @dataclasses.dataclass
 class Request:
     """One generation request.  ``arrival`` is in scheduler steps (the
-    simulated clock) — the Poisson driver maps wall arrival times onto it."""
+    simulated clock) — the Poisson driver maps wall arrival times onto it.
+
+    Sampling is per request: ``temperature <= 0`` is greedy argmax; otherwise
+    nucleus sampling from the smallest token set whose probability mass
+    reaches ``top_p``, driven by a PRNG keyed on ``seed`` and folded with the
+    token index — the same (seed, prompt) always yields the same tokens.
+    """
     uid: int
     prompt: np.ndarray                    # [Sp] int32
     max_new_tokens: int
     arrival: float = 0.0
+    temperature: float = 0.0              # 0 → greedy
+    top_p: float = 1.0                    # nucleus mass (1 → full softmax)
+    seed: int = 0                         # per-request PRNG seed
     # filled in by the scheduler:
     generated: List[int] = dataclasses.field(default_factory=list)
+    prefill_pos: int = 0                  # prompt tokens already in the pool
     submit_wall: float = 0.0
     first_token_wall: float = 0.0
     first_token_step: int = -1
@@ -126,6 +153,8 @@ class SchedulerConfig:
     max_len: int = 256                    # per-sequence token cap (table width)
     eos_id: Optional[int] = None
     prefill_bucket: int = 16              # prompts pad up to a multiple of this
+    prefill_chunk_tokens: int = 0         # per-step prefill token budget
+                                          # (0 → whole prompt at admission)
     use_kernel: bool = True               # Pallas paged kernel on TPU
     cache_dtype: Any = jnp.float32
 
@@ -134,15 +163,65 @@ class SchedulerConfig:
         return -(-self.max_len // self.block_size)
 
 
+def sample_tokens(logits, temps, top_ps, seeds, counts):
+    """Batched per-request sampling for one decode step.
+
+    logits [B,V] fp32-castable, temps/top_ps [B] fp32, seeds/counts [B] int32.
+    Lane ``i`` draws from PRNG ``fold_in(PRNGKey(seeds[i]), counts[i])`` — the
+    count is the request's token index, so replaying a request with the same
+    seed reproduces its tokens regardless of which slot/step served it.
+    ``temps[i] <= 0`` reduces exactly to greedy argmax.  → [B] int32.
+    """
+
+    def one(lg, temp, top_p, seed, count):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+        greedy = jnp.argmax(lg).astype(jnp.int32)
+        scaled = lg.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
+        order = jnp.argsort(-scaled)                # descending
+        sl = scaled[order]
+        probs = jax.nn.softmax(sl)
+        # nucleus: drop tokens whose preceding cumulative mass already covers
+        # top_p (the smallest covering set always keeps its first member)
+        cut = (jnp.cumsum(probs) - probs) >= top_p
+        sl = jnp.where(cut, -jnp.inf, sl)
+        tok = order[jax.random.categorical(key, sl)].astype(jnp.int32)
+        return jnp.where(temp <= 0.0, greedy, tok)
+
+    return jax.vmap(one)(logits, temps, top_ps, seeds, counts)
+
+
+def ttft_by_prompt_bucket(finished: List[Request],
+                          edges: Tuple[int, ...] = (16, 64)) -> Dict[str, float]:
+    """Mean TTFT (scheduler steps from arrival to first token) per prompt-
+    length bucket — the quantity chunked prefill improves for *short* prompts
+    that would otherwise queue behind long ones.  ``edges`` split lengths into
+    len(edges)+1 buckets: <=16, 17..64, >64 by default."""
+    out: Dict[str, float] = {}
+    lo = 0
+    for hi in tuple(edges) + (None,):
+        label = (f"{lo + 1}-{hi}" if hi is not None else f">{lo}")
+        ttfts = [r.first_token_step - r.arrival for r in finished
+                 if lo < len(r.prompt) and (hi is None or len(r.prompt) <= hi)]
+        if ttfts:
+            out[label] = float(np.mean(ttfts))
+        lo = hi if hi is not None else lo
+    return out
+
+
 @dataclasses.dataclass
 class ServeReport:
+    """End-of-run scheduler metrics (docs/serving.md explains how to read
+    them).  TTFT = arrival → first token; ``_steps`` is in simulated
+    scheduler steps, ``_wall`` in wall milliseconds."""
     completed: int = 0
     decode_steps: int = 0
     prefill_tokens: int = 0
+    prefill_chunks: int = 0               # prefill forward calls issued
     decoded_tokens: int = 0
     wall_s: float = 0.0
     tok_per_s: float = 0.0
     ttft_steps_mean: float = 0.0
+    ttft_steps_by_bucket: Dict[str, float] = dataclasses.field(default_factory=dict)
     ttft_wall_p50_ms: float = 0.0
     ttft_wall_p95_ms: float = 0.0
     step_ms_p50: float = 0.0
@@ -154,9 +233,11 @@ class ServeReport:
     block_reuse_ratio: float = 0.0        # naive / high-water (>1 ⇒ paging won)
 
     def summary(self) -> str:
+        bucket = "".join(f" ttft[{k}]={v:.1f}" for k, v in
+                         self.ttft_steps_by_bucket.items())
         return (f"completed={self.completed} steps={self.decode_steps} "
                 f"decoded={self.decoded_tokens} tok/s={self.tok_per_s:.1f} "
-                f"ttft_steps={self.ttft_steps_mean:.1f} "
+                f"ttft_steps={self.ttft_steps_mean:.1f}{bucket} "
                 f"ttft_ms p50/p95={self.ttft_wall_p50_ms:.0f}/{self.ttft_wall_p95_ms:.0f} "
                 f"step_ms p50/p95={self.step_ms_p50:.1f}/{self.step_ms_p95:.1f} "
                 f"peak_slots={self.peak_slots} "
@@ -181,12 +262,24 @@ class Scheduler:
         self._step_wall_ms: List[float] = []
         self.peak_slots = 0
         self.naive_blocks = 0
+        self.prefill_chunks = 0             # prefill forward calls issued
 
         def _prefill(params, buffers, tokens, pages, slot_mapping):
             return lm.apply_prefill_paged(params, buffers, cfg,
                                           {"tokens": tokens}, pages,
                                           slot_mapping, moe_impl=moe_impl,
                                           mesh=mesh)
+
+        def _prefill_resume(params, buffers, tokens, pages, slot_mapping,
+                            chunk_start, block_tables, prefix_lens):
+            return lm.apply_prefill_paged(params, buffers, cfg,
+                                          {"tokens": tokens}, pages,
+                                          slot_mapping,
+                                          chunk_start=chunk_start,
+                                          block_tables=block_tables,
+                                          prefix_lens=prefix_lens,
+                                          block_size=scfg.block_size,
+                                          moe_impl=moe_impl, mesh=mesh)
 
         def _decode(params, buffers, tokens, pages, slot_mapping,
                     block_tables, lengths):
@@ -201,7 +294,9 @@ class Scheduler:
         # copying every block each step (donation is unsupported + noisy on CPU)
         donate = () if jax.default_backend() == "cpu" else (3,)
         self._prefill = jax.jit(_prefill, donate_argnums=donate)
+        self._prefill_resume = jax.jit(_prefill_resume, donate_argnums=donate)
         self._decode = jax.jit(_decode, donate_argnums=donate)
+        self._sample = jax.jit(sample_tokens)
 
     # -- request intake -----------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -247,23 +342,73 @@ class Scheduler:
         return admitted
 
     def _admit(self, slot: int, req: Request) -> None:
-        scfg = self.scfg
-        sp = len(req.prompt)
-        pad = -(-sp // scfg.prefill_bucket) * scfg.prefill_bucket
-        self.pool.ensure_capacity(req.uid, sp)
-        tokens = np.zeros((1, pad), np.int32)
-        tokens[0, :sp] = req.prompt
-        sm = self.pool.prefill_slot_mapping(req.uid, 0, sp, pad)[None]
-        logits, self.pool.pages = self._prefill(self.params, self.buffers,
-                                                jnp.asarray(tokens),
-                                                self.pool.pages,
-                                                jnp.asarray(sm))
-        first = int(jnp.argmax(logits[0, sp - 1]))
-        req.generated.append(first)
-        req.first_token_wall = time.perf_counter()
-        req.first_token_step = self.t
+        """Claim a slot and the prompt's pool blocks; prefill itself happens
+        in ``_prefill_work`` (chunked, interleaved with decode steps)."""
+        self.pool.ensure_capacity(req.uid, len(req.prompt))
+        req.prefill_pos = 0
         self.slots[slot] = req
-        self._maybe_finish(slot, first)
+
+    # -- chunked prefill ----------------------------------------------------
+    def _run_chunk(self, req: Request, start: int, n: int, pad: int):
+        """One prefill forward over prompt[start:start+n], padded to ``pad``.
+        Chunk 0 is a fresh causal prefill; resumed chunks additionally attend
+        to the cached prefix through the block table."""
+        tokens = np.zeros((1, pad), np.int32)
+        tokens[0, :n] = req.prompt[start:start + n]
+        sm = self.pool.prefill_slot_mapping(req.uid, start, n, pad)[None]
+        if start == 0:
+            logits, self.pool.pages = self._prefill(
+                self.params, self.buffers, jnp.asarray(tokens),
+                self.pool.pages, jnp.asarray(sm))
+        else:
+            bt = self.pool.block_table_array([req.uid],
+                                             self.scfg.max_blocks_per_seq)
+            logits, self.pool.pages = self._prefill_resume(
+                self.params, self.buffers, jnp.asarray(tokens),
+                self.pool.pages, jnp.asarray(sm),
+                jnp.asarray(start, jnp.int32), jnp.asarray(bt),
+                jnp.asarray([start], jnp.int32))
+        req.prefill_pos = start + n
+        self.prefill_chunks += 1
+        return logits
+
+    def _prefill_work(self) -> None:
+        """Spend this step's prefill token budget on mid-prefill slots, FCFS
+        by arrival.  ``prefill_chunk_tokens == 0`` means no budget cap: every
+        newly admitted prompt prefills whole in one call (one-shot mode)."""
+        chunk = self.scfg.prefill_chunk_tokens
+        left = chunk if chunk > 0 else None
+        while left is None or left > 0:
+            cand = [(s.arrival, i) for i, s in enumerate(self.slots)
+                    if s is not None and s.prefill_pos < len(s.prompt)]
+            if not cand:
+                return
+            _, slot = min(cand)
+            req = self.slots[slot]
+            sp = len(req.prompt)
+            start = req.prefill_pos
+            if left is None:                # one-shot: whole (padded) prompt
+                n = sp - start
+                pad = -(-sp // self.scfg.prefill_bucket) * self.scfg.prefill_bucket
+            else:                           # fixed chunk shape → one compile
+                n = min(chunk, sp - start, left)
+                pad = chunk
+                left -= n
+            logits = self._run_chunk(req, start, n, pad)
+            if req.prefill_pos >= sp:       # final chunk → sample first token
+                if req.temperature > 0:
+                    first = int(np.asarray(self._sample(
+                        logits[:, n - 1],
+                        jnp.asarray([req.temperature], jnp.float32),
+                        jnp.asarray([req.top_p], jnp.float32),
+                        jnp.asarray([req.seed], jnp.int32),
+                        jnp.asarray([0], jnp.int32)))[0])
+                else:
+                    first = int(jnp.argmax(logits[0, n - 1]))
+                req.generated.append(first)
+                req.first_token_wall = time.perf_counter()
+                req.first_token_step = self.t
+                self._maybe_finish(slot, first)
 
     # -- retirement ---------------------------------------------------------
     def _maybe_finish(self, slot: int, token: int) -> None:
@@ -281,20 +426,29 @@ class Scheduler:
 
     # -- one scheduler iteration -------------------------------------------
     def step(self) -> bool:
-        """Admit + decode once.  Returns False when fully drained."""
+        """Admit + chunk-prefill + decode once.  Returns False when drained."""
         self._try_admit()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
-        self.peak_slots = max(self.peak_slots, len(active))
+        self._prefill_work()
+        occupied = [i for i, s in enumerate(self.slots) if s is not None]
+        self.peak_slots = max(self.peak_slots, len(occupied))
+        # decode lanes: slots whose prompt is fully in the pool (mid-prefill
+        # slots sit out this decode step — their lane is masked by length 0)
+        active = [i for i in occupied
+                  if self.slots[i].prefill_pos >= len(self.slots[i].prompt)]
         if not active:
-            if not self.waiting:
+            if not occupied and not self.waiting:
                 return False
-            self.t += 1                     # idle tick: wait for next arrival
+            self.t += 1                     # waiting on arrivals or prefill
             return True
 
         scfg = self.scfg
         B = scfg.max_slots
         tokens = np.zeros((B, 1), np.int32)
         lengths = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        top_ps = np.ones((B,), np.float32)
+        seeds = np.zeros((B,), np.int32)
+        counts = np.zeros((B,), np.int32)
         seq_ids: List[Optional[int]] = [None] * B
         positions = [0] * B
         for i in active:
@@ -305,6 +459,10 @@ class Scheduler:
             lengths[i] = cur + 1
             seq_ids[i] = req.uid
             positions[i] = cur
+            temps[i] = req.temperature
+            top_ps[i] = req.top_p
+            seeds[i] = req.seed
+            counts[i] = len(req.generated)  # token index within the request
         sm = self.pool.slot_mapping(seq_ids, positions)
         bt = self.pool.block_table_array(seq_ids, scfg.max_blocks_per_seq)
 
@@ -314,7 +472,13 @@ class Scheduler:
                                                self.pool.pages,
                                                jnp.asarray(sm), jnp.asarray(bt),
                                                jnp.asarray(lengths))
-        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        if np.any(temps > 0):
+            nxt = np.asarray(self._sample(logits[:, -1, :], jnp.asarray(temps),
+                                          jnp.asarray(top_ps),
+                                          jnp.asarray(seeds),
+                                          jnp.asarray(counts)))
+        else:                               # all-greedy step: skip the
+            nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))  # sampler
         self._step_wall_ms.append((time.perf_counter() - t0) * 1e3)
         self.t += 1
         for i in active:
@@ -347,9 +511,11 @@ class Scheduler:
         hw = self.pool.allocator.high_water
         return ServeReport(
             completed=len(fin), decode_steps=len(self._step_wall_ms),
-            prefill_tokens=prefill_toks, decoded_tokens=decoded,
+            prefill_tokens=prefill_toks, prefill_chunks=self.prefill_chunks,
+            decoded_tokens=decoded,
             wall_s=wall_s, tok_per_s=decoded / max(wall_s, 1e-9),
             ttft_steps_mean=float(np.mean(ttft_steps)) if ttft_steps else 0.0,
+            ttft_steps_by_bucket=ttft_by_prompt_bucket(fin),
             ttft_wall_p50_ms=pct(ttft_ms, 50), ttft_wall_p95_ms=pct(ttft_ms, 95),
             step_ms_p50=pct(self._step_wall_ms, 50),
             step_ms_p95=pct(self._step_wall_ms, 95),

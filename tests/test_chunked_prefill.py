@@ -1,0 +1,212 @@
+"""Chunked prefill + per-request sampling for the paged serving loop.
+
+Golden invariant: splitting a prompt's prefill into chunks — any chunk size,
+dividing the prompt length or not, aligned with pool blocks or not — must
+produce *token-identical* greedy output to one-shot prefill, because resumed
+chunks attend to the exact cached prefix through the block table.  Sampling
+tier: per-request seeds are reproducible, temperature 0 reduces exactly to
+greedy, and top-p truncation is verifiable at the sampler level.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import PagedKVPool
+from repro.models import lm
+from repro.runtime import serve_loop
+
+
+def _run_stream(params, buffers, cfg, chunk, *, temp=0.0, top_p=1.0,
+                seeds=None, n_req=4, max_new=6, block_size=4, seed=3):
+    scfg = serve_loop.SchedulerConfig(
+        max_slots=2, block_size=block_size, num_blocks=64, max_len=48,
+        prefill_bucket=4, prefill_chunk_tokens=chunk)
+    sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+    rng = np.random.default_rng(seed)
+    reqs = [serve_loop.Request(
+        uid=i,
+        prompt=rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(5, 18))).astype(np.int32),
+        max_new_tokens=max_new, arrival=i * 0.7,
+        temperature=temp, top_p=top_p,
+        seed=(seeds[i] if seeds else 0)) for i in range(n_req)]
+    report = sched.run(reqs)
+    return {r.uid: list(r.generated) for r in sched.finished}, report
+
+
+# ---------------------------------------------------------------------------
+# chunked == one-shot (the acceptance invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [
+    4,          # == block_size: every chunk boundary is a block boundary
+    5,          # divides neither the prompts nor the pool blocks
+    32,         # >= every prompt: degenerates to one chunk
+])
+def test_chunked_prefill_token_parity(tiny_elite_cfg, tiny_elite_model, chunk):
+    params, buffers = tiny_elite_model
+    base, base_rep = _run_stream(params, buffers, tiny_elite_cfg, 0)
+    out, rep = _run_stream(params, buffers, tiny_elite_cfg, chunk)
+    assert out == base
+    assert rep.completed == base_rep.completed == 4
+    # chunking really split the work (except the degenerate full-prompt size)
+    if chunk < 18:
+        assert rep.prefill_chunks > base_rep.prefill_chunks
+
+
+def test_chunk_equal_to_block_crosses_boundaries(tiny_elite_cfg, tiny_elite_model):
+    """Prompt of exactly 3 blocks, chunk == block: every resumed chunk starts
+    on a block boundary and the prefix gather walks whole blocks."""
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    bs = 4
+    prompt = (np.arange(3 * bs) * 7 % cfg.vocab_size).astype(np.int32)
+
+    def run(chunk):
+        scfg = serve_loop.SchedulerConfig(
+            max_slots=1, block_size=bs, num_blocks=16, max_len=32,
+            prefill_bucket=4, prefill_chunk_tokens=chunk)
+        sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+        sched.run([serve_loop.Request(uid=0, prompt=prompt.copy(),
+                                      max_new_tokens=5)])
+        return sched.finished[0].generated
+
+    assert run(bs) == run(0)
+
+
+def test_chunked_pages_match_oneshot(tiny_elite_cfg, tiny_elite_model):
+    """The pool pages a chunked prefill writes are identical to one-shot's
+    on every slot the sequence owns (scatter windows cover each position
+    exactly once)."""
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    sp, bs, mb = 11, 4, 8
+    prompt = (np.arange(sp) * 5 % cfg.vocab_size).astype(np.int32)
+
+    def prefill(chunk):
+        pool = PagedKVPool(cfg, num_blocks=16, block_size=bs)
+        pool.ensure_capacity(0, sp)
+        pages = pool.pages
+        start = 0
+        while start < sp:
+            n = min(chunk, sp - start)
+            toks = np.zeros((1, chunk), np.int32)
+            toks[0, :n] = prompt[start:start + n]
+            sm = pool.prefill_slot_mapping(0, start, n, chunk)[None]
+            if start == 0:
+                _, pages = lm.apply_prefill_paged(
+                    params, buffers, cfg, {"tokens": jnp.asarray(toks)},
+                    pages, jnp.asarray(sm))
+            else:
+                _, pages = lm.apply_prefill_paged(
+                    params, buffers, cfg, {"tokens": jnp.asarray(toks)},
+                    pages, jnp.asarray(sm),
+                    chunk_start=jnp.asarray(start, jnp.int32),
+                    block_tables=jnp.asarray(pool.block_table_array([0], mb)),
+                    prefix_lens=jnp.asarray([start], jnp.int32),
+                    block_size=bs)
+            start += n
+        owned = [b * bs + i for b in pool.block_table(0) for i in range(bs)]
+        return pages, sorted(owned)[:sp]
+
+    pages_one, owned = prefill(sp)
+    pages_chunk, owned2 = prefill(3)
+    assert owned == owned2
+    k1 = np.asarray(pages_one["p0"]["k_e"][0])[owned]
+    k2 = np.asarray(pages_chunk["p0"]["k_e"][0])[owned]
+    np.testing.assert_allclose(k1, k2, atol=1e-6, rtol=1e-6)
+    c1 = np.asarray(pages_one["p0"]["c"][0])[owned]
+    c2 = np.asarray(pages_chunk["p0"]["c"][0])[owned]
+    np.testing.assert_allclose(c1, c2, atol=1e-6, rtol=1e-6)
+
+
+def test_chunked_prefill_interleaves_with_decode(tiny_elite_cfg, tiny_elite_model):
+    """A long prompt arriving while a short request decodes must not stall
+    it: the resident keeps producing tokens during the newcomer's chunked
+    prefill, and the newcomer's prefill spans multiple scheduler steps."""
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    scfg = serve_loop.SchedulerConfig(
+        max_slots=2, block_size=4, num_blocks=64, max_len=48,
+        prefill_bucket=4, prefill_chunk_tokens=4)
+    sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+    short = serve_loop.Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                               max_new_tokens=12, arrival=0.0)
+    long_ = serve_loop.Request(
+        uid=1, prompt=(np.arange(20) % cfg.vocab_size).astype(np.int32),
+        max_new_tokens=4, arrival=1.0)
+    sched.submit(short)
+    sched.submit(long_)
+    tokens_during_prefill = 0
+    while sched.step():
+        if (sched.slots.count(None) < 2 and long_.prefill_pos < 20
+                and long_.arrival <= sched.t):
+            tokens_during_prefill = len(short.generated)
+    assert len(sched.finished) == 2
+    # 20 prompt tokens / 4-token chunks ⇒ 5 chunk steps, the first at arrival
+    assert long_.first_token_step - long_.arrival >= 4
+    # the resident short request kept decoding while the long prompt prefilled
+    assert tokens_during_prefill > 1
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def test_sampling_same_seed_reproduces(tiny_elite_cfg, tiny_elite_model):
+    params, buffers = tiny_elite_model
+    seeds = [11, 22, 33, 44]
+    a, _ = _run_stream(params, buffers, tiny_elite_cfg, 4, temp=1.0, seeds=seeds)
+    b, _ = _run_stream(params, buffers, tiny_elite_cfg, 4, temp=1.0, seeds=seeds)
+    assert a == b
+    c, _ = _run_stream(params, buffers, tiny_elite_cfg, 4, temp=1.0,
+                       seeds=[s + 100 for s in seeds])
+    assert a != c                         # different seeds explore differently
+
+
+def test_temperature_zero_is_greedy(tiny_elite_cfg, tiny_elite_model):
+    """temperature=0 with any seed must equal the pure-greedy run — the
+    sampler collapses to argmax, not to a sharpened distribution."""
+    params, buffers = tiny_elite_model
+    greedy, _ = _run_stream(params, buffers, tiny_elite_cfg, 0)
+    cold, _ = _run_stream(params, buffers, tiny_elite_cfg, 0,
+                          temp=0.0, seeds=[5, 6, 7, 8])
+    assert cold == greedy
+
+
+def test_sample_tokens_unit():
+    """Sampler semantics on a hand-built distribution."""
+    logits = jnp.asarray([[0.0, 3.0, 1.0, -2.0]] * 3)
+    temps = jnp.asarray([0.0, 1.0, 1.0], jnp.float32)
+    # lane 1: top_p tiny → nucleus is exactly the argmax token
+    # lane 2: full nucleus, free to sample
+    top_ps = jnp.asarray([1.0, 1e-4, 1.0], jnp.float32)
+    seeds = jnp.asarray([0, 1, 2], jnp.int32)
+    counts = jnp.asarray([0, 0, 0], jnp.int32)
+    toks = np.asarray(serve_loop.sample_tokens(logits, temps, top_ps, seeds,
+                                               counts))
+    assert toks[0] == 1 and toks[1] == 1
+    assert 0 <= toks[2] < 4
+    # reproducible: same key → same draw; folded key moves on
+    again = np.asarray(serve_loop.sample_tokens(logits, temps, top_ps, seeds,
+                                                counts))
+    np.testing.assert_array_equal(toks, again)
+    draws = [int(np.asarray(serve_loop.sample_tokens(
+        logits[2:], temps[2:], top_ps[2:], seeds[2:],
+        jnp.asarray([c], jnp.int32)))[0]) for c in range(20)]
+    assert len(set(draws)) > 1            # the token-index fold matters
+
+
+def test_ttft_bucket_helper():
+    def req(sp, ttft):
+        r = serve_loop.Request(uid=0, prompt=np.zeros(sp, np.int32),
+                               max_new_tokens=1, arrival=0.0)
+        r.first_token_step = ttft
+        return r
+
+    buckets = serve_loop.ttft_by_prompt_bucket(
+        [req(4, 2), req(8, 4), req(30, 10), req(100, 20)], edges=(16, 64))
+    assert buckets == {"1-16": 3.0, "17-64": 10.0, ">64": 20.0}

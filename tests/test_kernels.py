@@ -76,6 +76,33 @@ def test_flash_prefill_sweep(S, nh, nkv, dh, bq, bk, dtype):
                                np.asarray(o_r, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("off,Sq,Sk,bq,bk", [
+    (32, 32, 64, 16, 16),        # resume mid-sequence
+    (48, 16, 64, 16, 32),        # last chunk, chunk < block_k
+    (0, 64, 64, 32, 32),         # offset 0 == ordinary causal
+])
+def test_flash_prefill_resumed_chunk(off, Sq, Sk, bq, bk):
+    """q_offset parity: a resumed chunk must equal the same rows of one-shot
+    causal attention over the full sequence."""
+    nh, nkv, dh = 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, Sk, nh, dh))
+    k = jax.random.normal(ks[1], (B, Sk, nkv, dh))
+    v = jax.random.normal(ks[2], (B, Sk, nkv, dh))
+    o_full = ref.flash_prefill_ref(q, k, v, nh // nkv, dh ** -0.5)
+    q_chunk = q[:, off:off + Sq]
+    o_k = fp.flash_prefill(q_chunk, k, v, nh // nkv, dh ** -0.5,
+                           block_q=bq, block_k=bk, q_offset=off,
+                           interpret=True)
+    o_r = ref.flash_prefill_ref(q_chunk, k, v, nh // nkv, dh ** -0.5,
+                                q_offset=off)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_full[:, off:off + Sq]),
+                               atol=2e-5, rtol=2e-5)
+
+
 @pytest.mark.parametrize("S,H,r,bs", [(64, 4, 4, 16), (32, 2, 8, 32), (128, 1, 2, 64)])
 def test_rope_elite_sweep(S, H, r, bs):
     key = jax.random.PRNGKey(2)

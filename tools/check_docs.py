@@ -1,0 +1,86 @@
+"""Docs consistency checker (the CI `docs` job; runnable locally).
+
+    python tools/check_docs.py
+
+Two guarantees:
+
+1. Every *relative* markdown link in the repo's ``*.md`` files resolves to an
+   existing file or directory (anchors are stripped; absolute URLs and
+   mailto: are ignored).
+2. README.md quotes the exact tier-1 verify command ROADMAP.md declares, so
+   the front-door instructions can never drift from the contract the driver
+   enforces.
+
+Exit status 0 on success; 1 with a per-problem report otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", ".github", ".claude", "__pycache__", ".pytest_cache"}
+
+# [text](target) — images match the same way; target may contain spaces, be
+# <>-wrapped, or carry a quoted title, all unpacked in _link_target
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+
+
+def _link_target(raw: str) -> str:
+    raw = raw.strip()
+    if raw.startswith("<") and ">" in raw:          # [x](<path with spaces>)
+        raw = raw[1:raw.index(">")]
+    else:
+        m = re.match(r'(\S+)\s+"[^"]*"$', raw)      # [x](path "title")
+        if m:
+            raw = m.group(1)
+    return raw.split("#", 1)[0]
+
+
+def md_files():
+    for p in sorted(REPO.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.relative_to(REPO).parts):
+            yield p
+
+
+def check_links() -> list:
+    problems = []
+    for md in md_files():
+        for m in LINK_RE.finditer(md.read_text(encoding="utf-8")):
+            target = _link_target(m.group(1))
+            if not target or "://" in target or target.startswith("mailto:"):
+                continue
+            resolved = (md.parent / target).resolve()
+            if not resolved.exists():
+                problems.append(f"{md.relative_to(REPO)}: broken link → {m.group(1)}")
+    return problems
+
+
+def check_verify_command() -> list:
+    roadmap = (REPO / "ROADMAP.md").read_text(encoding="utf-8")
+    m = re.search(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`", roadmap)
+    if not m:
+        return ["ROADMAP.md: no '**Tier-1 verify:** `...`' line found"]
+    cmd = m.group(1)
+    readme = (REPO / "README.md").read_text(encoding="utf-8")
+    if cmd not in readme:
+        return [f"README.md: tier-1 verify command drifted from ROADMAP.md "
+                f"(expected to contain: {cmd})"]
+    return []
+
+
+def main() -> int:
+    problems = check_links() + check_verify_command()
+    for p in problems:
+        print(f"FAIL {p}")
+    n_md = sum(1 for _ in md_files())
+    if problems:
+        print(f"{len(problems)} problem(s) across {n_md} markdown files")
+        return 1
+    print(f"ok: {n_md} markdown files, links resolve, verify command in sync")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
