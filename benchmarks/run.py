@@ -280,27 +280,59 @@ def serving():
                 max_new_tokens=int(rng.integers(4, 17)), arrival=t))
         return reqs
 
+    def run_one(rate, chunk, num_blocks=96, admission="preempt",
+                eviction="recompute", lanes=0):
+        scfg = serve_loop.SchedulerConfig(
+            max_slots=4, block_size=8, num_blocks=num_blocks,
+            max_new_tokens=16, max_len=64, prefill_bucket=8,
+            prefill_chunk_tokens=chunk, prefill_batch_lanes=lanes,
+            admission=admission, eviction=eviction)
+        sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+        t0 = time.time()
+        rep = sched.run(workload(rate))
+        us = (time.time() - t0) * 1e6 / max(rep.decode_steps, 1)
+        return sched, rep, us
+
     for rate, tag in [(2.0, "bursty"), (0.4, "trickle")]:
         for chunk in (0, 8):               # one-shot admission vs chunked
-            scfg = serve_loop.SchedulerConfig(
-                max_slots=4, block_size=8, num_blocks=96,
-                max_new_tokens=16, max_len=64, prefill_bucket=8,
-                prefill_chunk_tokens=chunk)
-            sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
-            t0 = time.time()
-            rep = sched.run(workload(rate))
-            us = (time.time() - t0) * 1e6 / max(rep.decode_steps, 1)
+            sched, rep, us = run_one(rate, chunk)
             buckets = ";".join(f"ttft_prompt_{k}={v:.1f}"
                                for k, v in rep.ttft_steps_by_bucket.items())
             emit(f"serving/poisson_{tag}_chunk{chunk}", us,
                  f"tok_s={rep.tok_per_s:.1f};ttft_steps={rep.ttft_steps_mean:.1f};"
                  f"{buckets};prefill_chunks={rep.prefill_chunks};"
+                 f"prefill_batch={rep.mean_prefill_batch:.2f};"
+                 f"occupancy={rep.mean_occupancy:.2f};"
                  f"step_ms_p50={rep.step_ms_p50:.1f};step_ms_p95={rep.step_ms_p95:.1f};"
                  f"peak_slots={rep.peak_slots};"
                  f"blocks_hw={rep.pool_high_water_blocks};"
                  f"blocks_naive={rep.naive_blocks};"
                  f"reuse={rep.block_reuse_ratio:.2f};"
                  f"paged_beats_naive={rep.pool_high_water_blocks < rep.naive_blocks}")
+
+    # watermark vs preempt at half the watermark-required capacity: the
+    # reservation policy needs worst-case blocks for every concurrently
+    # resident request (max_slots × ceil(max_len / block_size)); at 50% of
+    # that it stalls admission (low occupancy, empty slots) while the
+    # preempting policy fills the pool and completes the same request set
+    # with identical tokens.
+    wm_required = 4 * (-(-64 // 8))        # max_slots × blocks per worst case
+    small = wm_required // 2
+    results = {}
+    for admission, eviction in [("watermark", "recompute"),
+                                ("preempt", "recompute"), ("preempt", "swap")]:
+        sched, rep, us = run_one(2.0, 8, num_blocks=small,
+                                 admission=admission, eviction=eviction)
+        results[(admission, eviction)] = {
+            r.uid: list(r.generated) for r in sched.finished}
+        emit(f"serving/pool{small}_{admission}_{eviction}", us,
+             f"completed={rep.completed};occupancy={rep.mean_occupancy:.2f};"
+             f"peak_slots={rep.peak_slots};preemptions={rep.preemptions};"
+             f"preempted_requests={rep.preempted_requests};"
+             f"swaps={rep.swap_outs};ttft_steps={rep.ttft_steps_mean:.1f};"
+             f"prefill_batch={rep.mean_prefill_batch:.2f};"
+             f"tokens_match_watermark="
+             f"{results[(admission, eviction)] == results[('watermark', 'recompute')]}")
 
 
 ALL = {"table1": table1, "table2": table2, "fig5": fig5, "fig6": fig6,

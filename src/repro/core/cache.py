@@ -11,10 +11,17 @@ Paged pool
 ``PagedKVPool`` stores the compressed ``(k_e, c_kv)`` streams of every
 attention layer in fixed-size token *blocks* shared across sequences
 (vLLM-style).  Sequences own ragged chains of blocks via per-sequence block
-tables; the serving scheduler allocates on admission, grows one block at a
-time during decode, and recycles blocks the moment a sequence retires.
-Device pages are plain jax arrays handed to jitted steps and reassigned;
-all bookkeeping (free list, tables, lengths) is host-side Python.
+tables; chains grow one block at a time on demand and recycle the moment a
+sequence retires.  Device pages are plain jax arrays handed to jitted steps
+and reassigned; all bookkeeping (free list, tables, lengths) is host-side
+Python.
+
+``BlockManager`` layers the serving scheduler's *policy* on top of the pool:
+admission gating (preempt-on-demand vs the legacy watermark reservation),
+resident registration, and the two eviction mechanisms — recompute (free the
+victim's blocks; the scheduler re-prefills its prefix later) and host
+swap-out (copy the victim's cached streams to host memory and restore them
+block-exactly on re-admission).
 """
 from __future__ import annotations
 
@@ -188,17 +195,24 @@ class PagedKVPool:
             out[i, :len(t)] = t
         return out
 
+    def flat_slots(self, seq_id: int, positions) -> np.ndarray:
+        """Flat pool slots for logical ``positions`` of ``seq_id``'s chain:
+        position ``p`` lives at ``table[p // bs] · bs + p % bs``.  The single
+        source of the slot-layout formula (decode/prefill mappings and host
+        swap all route through here)."""
+        table = np.asarray(self._tables[seq_id], np.int64)
+        pos = np.asarray(positions)
+        return table[pos // self.block_size] * self.block_size \
+            + pos % self.block_size
+
     def slot_mapping(self, seq_ids: Sequence[Optional[int]],
                      positions: Sequence[int]) -> np.ndarray:
         """Flat write slots for one token per sequence; inactive lanes
         (seq_id None) map to ``oob_slot``."""
         out = np.full((len(seq_ids),), self.oob_slot, np.int32)
         for i, (sid, pos) in enumerate(zip(seq_ids, positions)):
-            if sid is None:
-                continue
-            table = self._tables[sid]
-            out[i] = table[pos // self.block_size] * self.block_size \
-                + pos % self.block_size
+            if sid is not None:
+                out[i] = self.flat_slots(sid, pos)
         return out
 
     def prefill_slot_mapping(self, seq_id: int, start: int,
@@ -206,11 +220,8 @@ class PagedKVPool:
         """Flat write slots for ``n_tokens`` consecutive positions starting at
         ``start``, padded with ``oob_slot`` up to ``pad_to`` (prompt padding)."""
         out = np.full((pad_to,), self.oob_slot, np.int32)
-        table = self._tables[seq_id]
-        for i in range(n_tokens):
-            pos = start + i
-            out[i] = table[pos // self.block_size] * self.block_size \
-                + pos % self.block_size
+        out[:n_tokens] = self.flat_slots(seq_id,
+                                         np.arange(start, start + n_tokens))
         return out
 
     # -- accounting ---------------------------------------------------------
@@ -231,6 +242,124 @@ class PagedKVPool:
             live_tokens=live, allocated_tokens=alloc_tok,
             live_bytes=live * fpt * itemsize,
             allocated_bytes=alloc_tok * fpt * itemsize)
+
+
+@dataclasses.dataclass
+class SwappedSeq:
+    """Host-side copy of a preempted sequence's cached streams (swap
+    eviction).  ``streams[p_key][name]`` is a ``[n_super, length, ...]``
+    numpy array in *token order* — independent of which physical blocks the
+    sequence owned, so swap-in may land on a completely different chain."""
+    length: int
+    streams: Dict[str, Dict[str, np.ndarray]]
+
+    def nbytes(self) -> int:
+        return sum(a.nbytes for s in self.streams.values() for a in s.values())
+
+
+class BlockManager:
+    """Admission + eviction policy over a ``PagedKVPool``.
+
+    Two admission policies:
+
+    * ``"preempt"`` (default) — no reservation.  A request is admitted as
+      soon as its *next allocation* (first prefill chunk, or the swapped-out
+      prefix being restored) fits in the free list; residents grow blocks on
+      demand and growth may raise ``OutOfBlocks`` mid-flight, which the
+      scheduler resolves by preempting the youngest resident.
+    * ``"watermark"`` — the legacy reservation policy: the worst-case blocks
+      still owed to every registered resident are held back, so admission is
+      refused unless the newcomer's full worst case fits in
+      ``free − reserved`` and growth can never fail.
+
+    Eviction mechanisms (used by the scheduler's preemption path):
+
+    * ``preempt_recompute`` — drop the victim's blocks; its cached prefix is
+      rebuilt by a recompute-prefill after re-admission.  Cheap to evict,
+      costs one prefill of the prefix — and under EliteKV that prefill only
+      re-fills the low-rank ``(k_e, c_kv)`` streams, the paper's compression
+      making recompute proportionally cheaper than for a full KV cache.
+    * ``preempt_swap_out`` / ``swap_in`` — copy the victim's live tokens to
+      host memory, free the blocks, and scatter the copy back into a fresh
+      chain on re-admission.  Costs PCIe traffic instead of FLOPs.
+    """
+
+    def __init__(self, pool: PagedKVPool, policy: str = "preempt"):
+        assert policy in ("preempt", "watermark"), policy
+        self.pool = pool
+        self.policy = policy
+        self._resident_worst: Dict[int, int] = {}   # seq_id → worst-case blocks
+        self.preemptions = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swapped_bytes = 0                      # lifetime host-swap traffic
+
+    # -- admission ----------------------------------------------------------
+    @property
+    def reserved_blocks(self) -> int:
+        """Watermark: worst-case blocks still owed to registered residents."""
+        return sum(max(0, w - len(self.pool.block_table(sid)))
+                   for sid, w in self._resident_worst.items())
+
+    def can_admit(self, first_alloc_tokens: int, worst_case_blocks: int) -> bool:
+        if self.policy == "watermark":
+            return (self.pool.allocator.num_free - self.reserved_blocks
+                    >= worst_case_blocks)
+        return self.pool.can_fit(first_alloc_tokens)
+
+    def register(self, seq_id: int, worst_case_blocks: int) -> None:
+        """Mark ``seq_id`` resident (watermark accounting input)."""
+        self._resident_worst[seq_id] = worst_case_blocks
+
+    # -- growth / release ---------------------------------------------------
+    def grow(self, seq_id: int, length: int) -> None:
+        """Grow ``seq_id`` to ``length`` tokens; raises ``OutOfBlocks`` when
+        the pool is exhausted (the scheduler then preempts)."""
+        self.pool.ensure_capacity(seq_id, length)
+
+    def release(self, seq_id: int) -> None:
+        """Retire or evict: free the chain and drop residency."""
+        self.pool.free_seq(seq_id)
+        self._resident_worst.pop(seq_id, None)
+
+    # -- eviction -----------------------------------------------------------
+    def preempt_recompute(self, seq_id: int) -> None:
+        self.release(seq_id)
+        self.preemptions += 1
+
+    def preempt_swap_out(self, seq_id: int, length: int) -> Optional[SwappedSeq]:
+        """Copy ``length`` cached tokens to host, then free the chain.
+        ``length`` comes from the *request's* state, not ``pool.length`` —
+        a growth bump whose decode step never ran must not be swapped.
+        Returns None when nothing is cached yet (plain requeue)."""
+        self.preemptions += 1
+        if length <= 0:
+            self.release(seq_id)
+            return None
+        # gather the victim's slots on device, then transfer just those —
+        # host traffic is O(sequence), not O(pool)
+        slots = jnp.asarray(self.pool.flat_slots(seq_id, np.arange(length)))
+        streams = {p_key: {name: np.asarray(arr[:, slots])
+                           for name, arr in layer.items()}
+                   for p_key, layer in self.pool.pages.items()}
+        self.release(seq_id)
+        swapped = SwappedSeq(length=length, streams=streams)
+        self.swap_outs += 1
+        self.swapped_bytes += swapped.nbytes()
+        return swapped
+
+    def swap_in(self, seq_id: int, swapped: SwappedSeq) -> None:
+        """Allocate a fresh chain and scatter the host copy back.  Raises
+        ``OutOfBlocks`` if the prefix does not fit (caller defers admission)."""
+        self.pool.ensure_capacity(seq_id, swapped.length)
+        slots = jnp.asarray(self.pool.flat_slots(seq_id,
+                                                 np.arange(swapped.length)))
+        for p_key, layer in swapped.streams.items():
+            self.pool.pages[p_key] = {
+                name: self.pool.pages[p_key][name].at[:, slots].set(
+                    jnp.asarray(host, self.pool.pages[p_key][name].dtype))
+                for name, host in layer.items()}
+        self.swap_ins += 1
 
 
 def measured_cache_bytes(cache, batch: int, max_len: int) -> Dict[str, int]:

@@ -287,10 +287,15 @@ def _gather_prefix(pages, params, cfg, block_tables, block_size: int, dt):
 
 def _attend_resumed(q, k_pre, v_pre, k_cur, v_cur, prefix_lens, q_group: int,
                     scale: float, constrain=lambda n, t: t):
-    """Attention for a resumed prefill chunk: queries see the cached prefix
-    (key j valid iff j < prefix_len — the gather window is padded with foreign
-    blocks) plus the current chunk causally.  q/k_cur/v_cur [B,S,*,dh],
-    k_pre/v_pre [B,P,nkv,dh], prefix_lens [B] int32.  → [B,S,nh,dh]."""
+    """Attention for a batch of resumed prefill chunks: lane ``b``'s queries
+    see that lane's cached prefix (key j valid iff j < prefix_lens[b] — the
+    gather window is padded with foreign blocks) plus its current chunk
+    causally.  Everything is per lane, so chunks of *different* sequences at
+    different offsets pack into one call; ``prefix_lens[b] == 0`` reduces
+    lane ``b`` to ordinary causal prefill (fresh chunk), and all-pad lanes
+    produce garbage rows that the caller never reads (their pool writes hit
+    the drop sentinel).  q/k_cur/v_cur [B,S,*,dh], k_pre/v_pre [B,P,nkv,dh],
+    prefix_lens [B] int32.  → [B,S,nh,dh]."""
     B, S = q.shape[:2]
     P = k_pre.shape[1]
     k = jnp.concatenate([k_pre, k_cur], axis=1)
@@ -320,11 +325,13 @@ def apply_prefill_paged(params, cfg, buffers, x, positions, pages,
     *write* is paged.  x [B,S,d]; slot_mapping [B,S] flat pool slots (pad
     positions → sentinel).
 
-    Resumed chunks (chunked prefill): ``positions`` carry the chunk's global
-    offsets, ``block_tables`` [B,mb] + ``prefix_lens`` [B] locate the already-
+    Resumed chunks (chunked prefill): ``positions`` carry the chunks' global
+    offsets — [S] when every lane shares one offset, [B,S] when lanes hold
+    chunks of different sequences (batched chunked prefill) — and
+    ``block_tables`` [B,mb] + ``prefix_lens`` [B] locate each lane's already-
     cached prefix, which is gathered from the pool, up-projected through
-    bk/bv, and attended with the offset causal mask (the XLA analogue of
-    ``flash_prefill``'s ``q_offset``; see docs/serving.md).
+    bk/bv, and attended with the per-lane offset causal mask (the XLA
+    analogue of ``flash_prefill``'s ``q_offsets``; see docs/serving.md).
     → (out [B,S,d], new_pages)
     """
     from repro.models.attention import _attend

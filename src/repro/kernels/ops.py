@@ -48,14 +48,32 @@ def elite_decode_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
 
 
 @functools.partial(jax.jit, static_argnames=("q_group", "scale", "block_q",
-                                             "block_k", "q_offset"))
-def flash_prefill(q, k, v, q_group: int, scale: float,
-                  block_q: int = 256, block_k: int = 512, q_offset: int = 0):
-    """``q_offset`` > 0 resumes a prefill chunk against a longer key context
-    (chunked prefill, see docs/serving.md)."""
+                                             "block_k"))
+def _flash_prefill_jit(q, k, v, q_offsets, kv_lens, q_group: int, scale: float,
+                       block_q: int, block_k: int):
     return _fp.flash_prefill(q, k, v, q_group, scale, block_q=block_q,
-                             block_k=block_k, q_offset=q_offset,
-                             interpret=_interpret())
+                             block_k=block_k, q_offset=q_offsets,
+                             kv_lens=kv_lens, interpret=_interpret())
+
+
+def flash_prefill(q, k, v, q_group: int, scale: float,
+                  block_q: int = 256, block_k: int = 512, q_offset=0,
+                  kv_lens=None):
+    """``q_offset`` resumes prefill chunks against a longer key context
+    (chunked prefill, see docs/serving.md): a python int applies one offset
+    to every lane, a per-lane [B] vector packs chunks resumed from different
+    sequences into one call.  ``kv_lens`` [B] masks per-lane key tails.
+    Offsets/lengths are traced (scalar-prefetch), so one compile covers every
+    batch composition."""
+    B, Sk = q.shape[0], k.shape[1]
+    if isinstance(q_offset, int):           # static path: validate the contract
+        assert q_offset >= 0 and Sk >= q.shape[1] + q_offset, \
+            (q.shape[1], Sk, q_offset)
+    q_offsets = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+    kv_lens = (jnp.full((B,), Sk, jnp.int32) if kv_lens is None
+               else jnp.asarray(kv_lens, jnp.int32))
+    return _flash_prefill_jit(q, k, v, q_offsets, kv_lens, q_group, scale,
+                              min(block_q, q.shape[1]), min(block_k, Sk))
 
 
 @functools.partial(jax.jit, static_argnames=("block_s",))

@@ -59,19 +59,29 @@ def elite_decode_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
 
 
 def flash_prefill_ref(q, k, v, q_group: int, scale: float,
-                      q_offset: int = 0) -> jnp.ndarray:
+                      q_offset=0, kv_lens=None) -> jnp.ndarray:
     """Causal attention oracle.  q [B,Sq,nh,dh], k/v [B,Sk,nkv,dh] → [B,Sq,nh,dh].
 
-    ``q_offset`` shifts the causal diagonal (resumed prefill chunks): key j is
-    visible to query i iff j <= i + q_offset.
+    ``q_offset`` shifts the causal diagonal (resumed prefill chunks): key j
+    is visible to query i of lane b iff  j <= i + q_offset[b]  and
+    j < kv_lens[b].  Scalars broadcast; per-lane [B] vectors let one batch
+    hold chunks resumed from different sequences (batched chunked prefill).
+    Queries with no visible key (kv_lens == 0 lanes) attend to nothing and
+    output exact zeros, mirroring the length-0 decode semantics.
     """
     B, Sq, nh, dh = q.shape
     Sk, nkv = k.shape[1], k.shape[2]
+    offs = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+    lens = (jnp.full((B,), Sk, jnp.int32) if kv_lens is None
+            else jnp.asarray(kv_lens, jnp.int32))
     qg = q.reshape(B, Sq, nkv, q_group, dh)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32) * scale
-    mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None] + q_offset
-    s = jnp.where(mask[None, None, None], s, -1e30)
+    kpos = jnp.arange(Sk)[None, None, :]
+    mask = (kpos <= jnp.arange(Sq)[None, :, None] + offs[:, None, None]) \
+        & (kpos < lens[:, None, None])                       # [B,Sq,Sk]
+    s = jnp.where(mask[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[:, None, None, ..., None], p, 0.0)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
     return o.reshape(B, Sq, nh, dh)
 

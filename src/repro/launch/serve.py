@@ -18,12 +18,18 @@ Request-stream mode — continuous batching over the paged pool:
 (``--rate`` requests per decode step, exponential inter-arrivals, seeded):
 prompt lengths and generation budgets are sampled per request, the
 ``runtime.serve_loop.Scheduler`` admits arrivals into free slots mid-flight,
-prefills their prompts in ``--prefill-chunk``-token chunks interleaved with
-decode steps (0 = whole prompt at admission), retires sequences on EOS or
-budget, and recycles their pool blocks immediately.  ``--temperature`` /
+prefills their prompts in ``--prefill-chunk``-token chunks — up to
+``--prefill-lanes`` sequences' chunks packed into one forward — interleaved
+with decode steps (0 = whole prompt at admission), retires sequences on EOS
+or budget, and recycles their pool blocks immediately.  ``--admission
+preempt`` (default) admits without reservation and, when the pool runs dry,
+preempts the youngest resident — recompute-prefill of its generated prefix,
+or host swap with ``--eviction swap``; ``--admission watermark`` keeps the
+legacy worst-case reservation for comparison.  ``--temperature`` /
 ``--top-p`` select per-request sampling (temperature 0 = greedy); each
 request gets the PRNG seed ``--sample-seed + uid``, so reruns reproduce
-token-for-token.  The run ends by printing the scheduler metrics line:
+token-for-token — including across preemptions.  The run ends by printing
+the scheduler metrics line:
 
     completed / decode steps / decoded tokens / tok/s — throughput
     ttft_steps (+ per prompt-length bucket), ttft_ms p50/p95
@@ -32,6 +38,9 @@ token-for-token.  The run ends by printing the scheduler metrics line:
     blocks high-water/naive, reuse×      — peak pool blocks vs the sum of
                                            per-request worst cases; reuse > 1
                                            is paging's memory win
+    occ / preempt(swap) / prefill_batch  — mean pool occupancy, evictions
+                                           (and how many used host swap),
+                                           mean lanes per prefill forward
 
 plus the pool accounting (live vs allocated bytes, block size, free blocks).
 docs/serving.md walks through every field.
@@ -62,7 +71,9 @@ def serve_stream(params, buffers, cfg, args):
         num_blocks=args.num_blocks, eos_id=args.eos_id,
         max_new_tokens=args.new_tokens,
         max_len=args.prompt_len + args.new_tokens + 1,
-        prefill_chunk_tokens=args.prefill_chunk)
+        prefill_chunk_tokens=args.prefill_chunk,
+        prefill_batch_lanes=args.prefill_lanes,
+        admission=args.admission, eviction=args.eviction)
     sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
     p_lo = min(4, args.prompt_len)          # sampling floors, valid even for
     n_lo = min(4, args.new_tokens)          # --prompt-len/--new-tokens < 4
@@ -83,8 +94,16 @@ def serve_stream(params, buffers, cfg, args):
     stats = sched.pool.stats()
     print(f"arch={cfg.name} stream: {report.summary()}")
     if scfg.prefill_chunk_tokens:
-        print(f"chunked prefill: {report.prefill_chunks} chunks of "
-              f"<= {scfg.prefill_chunk_tokens} tokens interleaved with decode")
+        print(f"chunked prefill: {report.prefill_chunks} forwards of "
+              f"<= {scfg.prefill_chunk_tokens} tokens x {scfg.chunk_lanes} "
+              f"lanes (mean {report.mean_prefill_batch:.2f} live) "
+              f"interleaved with decode")
+    if report.preemptions:
+        print(f"preemption [{scfg.eviction}]: {report.preemptions} evictions "
+              f"across {report.preempted_requests} requests "
+              f"(host swaps out/in {report.swap_outs}/{report.swap_ins}, "
+              f"{report.swapped_bytes / 2**10:.1f}KiB out); "
+              f"mean occupancy {report.mean_occupancy:.2f}")
     print(f"pool: block_size={stats.block_size} blocks={stats.num_blocks} "
           f"high_water={report.pool_high_water_blocks} "
           f"free_after_drain={stats.blocks_free} "
@@ -117,8 +136,20 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=128)
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="per-step chunked-prefill token budget "
+                    help="per-lane per-step chunked-prefill token budget "
                          "(0 = whole prompt at admission)")
+    ap.add_argument("--prefill-lanes", type=int, default=0,
+                    help="mid-prefill sequences packed per chunked-prefill "
+                         "forward (0 = max-slots, 1 = one request per chunk)")
+    ap.add_argument("--admission", choices=("preempt", "watermark"),
+                    default="preempt",
+                    help="preempt: admit on demand, evict youngest on "
+                         "OutOfBlocks; watermark: legacy worst-case "
+                         "reservation (never preempts)")
+    ap.add_argument("--eviction", choices=("recompute", "swap"),
+                    default="recompute",
+                    help="preemption mechanism: recompute the evicted prefix "
+                         "or swap the cached streams to host memory")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for stream requests (0 = greedy)")
     ap.add_argument("--top-p", type=float, default=1.0,

@@ -87,13 +87,19 @@ def init(key, cfg) -> Tuple[Dict[str, Any], Dict[str, Any]]:
 # embedding / frontend stubs
 # ---------------------------------------------------------------------------
 
-def _embed_inputs(params, cfg, batch: Dict[str, Any], dtype):
+def _embed_step(params, cfg, batch: Dict[str, Any]):
+    """Token/frame embedding dispatch shared by every prefill/decode entry
+    point: audio frontends feed raw frames, everything else embeds tokens."""
     if cfg.frontend == "audio":
-        return batch["frames"].astype(dtype)
+        return batch["frames"].astype(cfg.dtype)
+    return embed(params["embed"], batch["tokens"], cfg.dtype)
+
+
+def _embed_inputs(params, cfg, batch: Dict[str, Any], dtype):
     if cfg.frontend == "vision" and "patch_embeds" in batch:
         txt = embed(params["embed"], batch["tokens"], dtype)
         return jnp.concatenate([batch["patch_embeds"].astype(dtype), txt], axis=1)
-    return embed(params["embed"], batch["tokens"], dtype)
+    return _embed_step(params, cfg, batch)
 
 
 def _logits(params, cfg, h, constrain=_NOOP):
@@ -293,8 +299,7 @@ def apply_prefill(params, buffers, cfg, batch, cache, moe_impl="ragged",
 def apply_decode(params, buffers, cfg, batch, cache, moe_impl="ragged",
                  mesh=None, constrain=_NOOP, data_axes=("data",)):
     """One new token.  batch["tokens"]: [B,1].  → (logits [B,1,V], new_cache)."""
-    h = embed(params["embed"], batch["tokens"], cfg.dtype) if cfg.frontend != "audio" \
-        else batch["frames"].astype(cfg.dtype)
+    h = _embed_step(params, cfg, batch)
     index = cache["index"]
     positions = jnp.full((h.shape[0], 1), index, jnp.int32)
     h, aux, new_blocks = _scan_blocks(
@@ -319,11 +324,16 @@ def apply_prefill_paged(params, buffers, cfg, batch, pages, slot_mapping,
     One-shot mode (default): prompts start at position 0 and attend causally
     to themselves only.
 
-    Chunked mode (``chunk_start`` given — a traced scalar, so one jit covers
-    every chunk): tokens sit at global positions ``chunk_start + i``; RoPE is
-    applied at those positions and attention additionally sees the sequence's
-    already-cached prefix, located by ``block_tables`` [B,mb] /
-    ``prefix_lens`` [B] / static ``block_size``.  → (logits [B,S,V], new_pages).
+    Chunked mode (``chunk_start`` given — a traced scalar or a per-lane [B]
+    vector, so one jit covers every chunk *and* every batch composition):
+    lane ``b``'s tokens sit at global positions ``chunk_start[b] + i``; RoPE
+    is applied at those positions and attention additionally sees each lane's
+    own already-cached prefix, located by ``block_tables`` [B,mb] /
+    ``prefix_lens`` [B] / static ``block_size``.  Lanes whose chunk is fresh
+    (``chunk_start == prefix_lens == 0``) reduce exactly to causal prefill,
+    so mid-prefill chunks of *different* sequences — resumed or not — pack
+    into one forward (batched chunked prefill, see docs/serving.md).
+    → (logits [B,S,V], new_pages).
     """
     assert cfg.elitekv.enabled, "paged serving requires an EliteKV cache"
     h = _embed_inputs(params, cfg, batch, cfg.dtype)
@@ -332,7 +342,10 @@ def apply_prefill_paged(params, buffers, cfg, batch, pages, slot_mapping,
     positions = jnp.arange(S)
     paged = {"slot_mapping": slot_mapping}
     if chunk_start is not None:
-        positions = positions + chunk_start
+        cs = jnp.asarray(chunk_start, jnp.int32)
+        # scalar → [S] positions (PR-3 single-lane path); [B] → [B,S] per-lane
+        positions = (positions + cs if cs.ndim == 0
+                     else positions[None, :] + cs[:, None])
         paged.update(block_tables=block_tables, prefix_lens=prefix_lens,
                      block_size=block_size)
     h, aux, new_pages = _scan_blocks(
@@ -356,8 +369,7 @@ def apply_decode_paged(params, buffers, cfg, batch, pages, slot_mapping,
     → (logits [B,1,V], new_pages).
     """
     assert cfg.elitekv.enabled, "paged serving requires an EliteKV cache"
-    h = embed(params["embed"], batch["tokens"], cfg.dtype) if cfg.frontend != "audio" \
-        else batch["frames"].astype(cfg.dtype)
+    h = _embed_step(params, cfg, batch)
     paged = {"slot_mapping": slot_mapping, "block_tables": block_tables,
              "lengths": lengths, "block_size": block_size,
              "use_kernel": use_kernel}

@@ -5,28 +5,38 @@ Two tiers:
 * ``generate`` — lockstep batched greedy decoding with a contiguous cache
   (examples / parity oracle).
 * ``Scheduler`` — continuous batching over the block-paged pool
-  (``core.cache.PagedKVPool``): requests queue with arrival times, get
-  admitted into free *slots* mid-flight, prefill their prompts in fixed-size
-  token **chunks** interleaved with decode steps (so a long arriving prompt
-  never stalls resident sequences), and retire on EOS or token budget — their
-  blocks recycle immediately.  Each scheduler step spends at most
-  ``prefill_chunk_tokens`` prompt tokens on chunked prefill before running
+  (``core.cache.PagedKVPool`` + ``core.cache.BlockManager``): requests queue
+  with arrival times, get admitted into free *slots* mid-flight, prefill
+  their prompts in fixed-size token **chunks** interleaved with decode steps
+  (so a long arriving prompt never stalls resident sequences), and retire on
+  EOS or token budget — their blocks recycle immediately.  Each scheduler
+  step packs up to ``prefill_batch_lanes`` mid-prefill sequences' chunks
+  (``prefill_chunk_tokens`` each) into **one** padded forward — per-lane
+  ``chunk_start`` / ``prefix_lens`` vectors let resumed chunks of different
+  sequences attend to their own paged prefixes in the same call — then runs
   one decode step over all ``max_slots`` lanes (idle and still-prefilling
-  lanes are masked by length 0); with ``prefill_chunk_tokens=0`` the whole
+  lanes are masked by length 0).  With ``prefill_chunk_tokens=0`` the whole
   prompt is prefilled at admission in one call (PR-2 behaviour).  The run
   compiles once per prompt-length bucket (one-shot), once for the fixed
-  chunk shape (chunked), plus once for decode.
+  batched chunk shape (chunked), plus once for decode.
 
 Decoding samples per request: temperature / nucleus (top-p) with a
 per-request PRNG seed, applied batched over all lanes in one jitted call;
 ``temperature=0`` lanes reduce exactly to greedy argmax.
 
-Admission reserves *watermark* capacity (worst-case remaining blocks of every
-resident sequence) so a decode step can never run out of pool blocks
-mid-flight; physical blocks are still allocated on demand, one at a time, so
-peak usage stays far below the sum of per-request worst cases whenever
-arrivals stagger or sequences stop early.  Preemption/swap-out is a ROADMAP
-item.
+Admission (``admission="preempt"``, the default) holds nothing back: a
+request is admitted as soon as its next allocation fits, residents grow
+blocks on demand, and when the pool runs dry mid-flight the scheduler
+**preempts the youngest resident** — frees its blocks and requeues it at the
+head of the waiting line for a recompute-prefill of its already-generated
+prefix (``eviction="recompute"``), or copies its cached streams to host
+memory and restores them block-exactly on re-admission
+(``eviction="swap"``).  Token streams are invariant under preemption: a
+recomputed prefix reproduces the exact logits the interrupted decode step
+would have seen, and the count-folded sampling PRNG re-draws the exact same
+token.  ``admission="watermark"`` keeps the legacy reservation policy
+(worst-case remaining blocks of every resident held back, so growth can
+never fail) for comparison runs — it trades occupancy for never preempting.
 """
 from __future__ import annotations
 
@@ -40,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.cache import OutOfBlocks, PagedKVPool
+from repro.core.cache import BlockManager, OutOfBlocks, PagedKVPool
 from repro.models import lm
 
 
@@ -136,12 +146,21 @@ class Request:
     seed: int = 0                         # per-request PRNG seed
     # filled in by the scheduler:
     generated: List[int] = dataclasses.field(default_factory=list)
-    prefill_pos: int = 0                  # prompt tokens already in the pool
+    prefill_pos: int = 0                  # prefill-source tokens already cached
+    prefill_src: Optional[np.ndarray] = None   # recompute source (None → prompt)
+    swapped: Optional[Any] = None         # cache.SwappedSeq awaiting swap-in
+    preempted_at: List[int] = dataclasses.field(default_factory=list)
+    #   ^ len(generated) at each preemption (0 = preempted mid-prefill)
     submit_wall: float = 0.0
     first_token_wall: float = 0.0
     first_token_step: int = -1
     finish_step: int = -1
     finish_reason: str = ""               # "eos" | "budget"
+
+    def prefill_source(self) -> np.ndarray:
+        """Tokens that must be cached before decode (re)starts: the prompt,
+        or — after a recompute preemption — prompt + generated prefix."""
+        return self.prompt if self.prefill_src is None else self.prefill_src
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,14 +172,23 @@ class SchedulerConfig:
     max_len: int = 256                    # per-sequence token cap (table width)
     eos_id: Optional[int] = None
     prefill_bucket: int = 16              # prompts pad up to a multiple of this
-    prefill_chunk_tokens: int = 0         # per-step prefill token budget
+    prefill_chunk_tokens: int = 0         # per-lane per-step chunk size
                                           # (0 → whole prompt at admission)
+    prefill_batch_lanes: int = 0          # mid-prefill lanes packed per chunked
+                                          # forward (0 → max_slots; 1 → PR-3
+                                          # one-request-per-chunk behaviour)
+    admission: str = "preempt"            # "preempt" | "watermark" (legacy)
+    eviction: str = "recompute"           # "recompute" | "swap" (host swap-out)
     use_kernel: bool = True               # Pallas paged kernel on TPU
     cache_dtype: Any = jnp.float32
 
     @property
     def max_blocks_per_seq(self) -> int:
         return -(-self.max_len // self.block_size)
+
+    @property
+    def chunk_lanes(self) -> int:
+        return self.prefill_batch_lanes or self.max_slots
 
 
 def sample_tokens(logits, temps, top_ps, seeds, counts):
@@ -231,6 +259,14 @@ class ServeReport:
     pool_block_size: int = 0
     naive_blocks: int = 0                 # Σ per-request worst-case blocks
     block_reuse_ratio: float = 0.0        # naive / high-water (>1 ⇒ paging won)
+    admission: str = "preempt"            # policy the run used
+    preemptions: int = 0                  # evictions forced by OutOfBlocks
+    preempted_requests: int = 0           # distinct requests evicted ≥ once
+    swap_outs: int = 0                    # preemptions served by host swap
+    swap_ins: int = 0                     # swapped prefixes restored
+    swapped_bytes: int = 0                # host↔device eviction traffic (out)
+    mean_occupancy: float = 0.0           # mean fraction of pool blocks in use
+    mean_prefill_batch: float = 0.0       # mean lanes per chunked-prefill call
 
     def summary(self) -> str:
         bucket = "".join(f" ttft[{k}]={v:.1f}" for k, v in
@@ -242,7 +278,11 @@ class ServeReport:
                 f"step_ms p50/p95={self.step_ms_p50:.1f}/{self.step_ms_p95:.1f} "
                 f"peak_slots={self.peak_slots} "
                 f"blocks high-water/naive={self.pool_high_water_blocks}/"
-                f"{self.naive_blocks} reuse×{self.block_reuse_ratio:.2f}")
+                f"{self.naive_blocks} reuse×{self.block_reuse_ratio:.2f} "
+                f"occ={self.mean_occupancy:.2f} [{self.admission}] "
+                f"preempt={self.preemptions}"
+                f"(swap {self.swap_outs}/{self.swap_ins}) "
+                f"prefill_batch={self.mean_prefill_batch:.1f}")
 
 
 class Scheduler:
@@ -251,18 +291,21 @@ class Scheduler:
     def __init__(self, params, buffers, cfg: ModelConfig,
                  scfg: SchedulerConfig, mesh=None, moe_impl: str = "ragged"):
         assert cfg.elitekv.enabled, "paged serving requires an EliteKV config"
+        assert scfg.eviction in ("recompute", "swap"), scfg.eviction
         self.params, self.buffers, self.cfg, self.scfg = params, buffers, cfg, scfg
         self.pool = PagedKVPool(cfg, scfg.num_blocks, scfg.block_size,
                                 dtype=scfg.cache_dtype)
+        self.bm = BlockManager(self.pool, policy=scfg.admission)
         self.slots: List[Optional[Request]] = [None] * scfg.max_slots
         self.waiting: collections.deque = collections.deque()
         self.finished: List[Request] = []
         self.t = 0                          # simulated clock (decode steps)
-        self._reserved_blocks = 0           # watermark: worst-case growth of residents
         self._step_wall_ms: List[float] = []
+        self._occupancy: List[float] = []   # pool fill fraction per step
         self.peak_slots = 0
         self.naive_blocks = 0
         self.prefill_chunks = 0             # prefill forward calls issued
+        self._prefill_lanes_total = 0       # Σ live lanes over those calls
 
         def _prefill(params, buffers, tokens, pages, slot_mapping):
             return lm.apply_prefill_paged(params, buffers, cfg,
@@ -270,12 +313,12 @@ class Scheduler:
                                           slot_mapping, moe_impl=moe_impl,
                                           mesh=mesh)
 
-        def _prefill_resume(params, buffers, tokens, pages, slot_mapping,
-                            chunk_start, block_tables, prefix_lens):
+        def _prefill_batch(params, buffers, tokens, pages, slot_mapping,
+                           chunk_starts, block_tables, prefix_lens):
             return lm.apply_prefill_paged(params, buffers, cfg,
                                           {"tokens": tokens}, pages,
                                           slot_mapping,
-                                          chunk_start=chunk_start,
+                                          chunk_start=chunk_starts,
                                           block_tables=block_tables,
                                           prefix_lens=prefix_lens,
                                           block_size=scfg.block_size,
@@ -294,7 +337,7 @@ class Scheduler:
         # copying every block each step (donation is unsupported + noisy on CPU)
         donate = () if jax.default_backend() == "cpu" else (3,)
         self._prefill = jax.jit(_prefill, donate_argnums=donate)
-        self._prefill_resume = jax.jit(_prefill_resume, donate_argnums=donate)
+        self._prefill_batch = jax.jit(_prefill_batch, donate_argnums=donate)
         self._decode = jax.jit(_decode, donate_argnums=donate)
         self._sample = jax.jit(sample_tokens)
 
@@ -315,100 +358,203 @@ class Scheduler:
     def _worst_case_blocks(self, req: Request) -> int:
         return -(-(len(req.prompt) + req.max_new_tokens) // self.scfg.block_size)
 
-    def _recompute_reserved(self) -> None:
-        """Watermark: worst-case blocks still owed to resident sequences.
-        Admission against ``num_free - reserved`` guarantees decode can always
-        grow every resident by its full budget — no mid-flight OutOfBlocks."""
-        self._reserved_blocks = sum(
-            max(0, self._worst_case_blocks(s) - len(self.pool.block_table(s.uid)))
-            for s in self.slots if s is not None)
+    def _first_alloc_tokens(self, req: Request) -> int:
+        """Pool tokens the request needs *immediately* at admission: the
+        swapped-out prefix being restored, the first prefill chunk, or (one-
+        shot mode) the whole prefill source."""
+        if req.swapped is not None:
+            return req.swapped.length
+        src = len(req.prefill_source())
+        chunk = self.scfg.prefill_chunk_tokens
+        return min(chunk, src) if chunk > 0 else src
 
     # -- admission ----------------------------------------------------------
     def _try_admit(self) -> int:
         admitted = 0
-        self._recompute_reserved()
         while self.waiting and self.waiting[0].arrival <= self.t:
             slot = next((i for i, s in enumerate(self.slots) if s is None), None)
             if slot is None:
                 break
             req = self.waiting[0]
-            need = self._worst_case_blocks(req)
-            if self.pool.allocator.num_free - self._reserved_blocks < need:
-                break                       # pool watermark exhausted — wait
+            if not self.bm.can_admit(self._first_alloc_tokens(req),
+                                     self._worst_case_blocks(req)):
+                break                       # head-of-line waits for blocks
             self.waiting.popleft()
             self._admit(slot, req)
-            self._recompute_reserved()
             admitted += 1
         return admitted
 
     def _admit(self, slot: int, req: Request) -> None:
-        """Claim a slot and the prompt's pool blocks; prefill itself happens
-        in ``_prefill_work`` (chunked, interleaved with decode steps)."""
-        self.pool.ensure_capacity(req.uid, len(req.prompt))
-        req.prefill_pos = 0
+        """Claim a slot (restoring a swapped-out prefix if there is one).
+        Block allocation otherwise happens on demand, chunk by chunk, in
+        ``_prefill_work`` — and prefill itself is interleaved with decode."""
+        if req.swapped is not None:
+            self.bm.swap_in(req.uid, req.swapped)
+            req.swapped = None
+        self.bm.register(req.uid, self._worst_case_blocks(req))
         self.slots[slot] = req
 
-    # -- chunked prefill ----------------------------------------------------
-    def _run_chunk(self, req: Request, start: int, n: int, pad: int):
-        """One prefill forward over prompt[start:start+n], padded to ``pad``.
-        Chunk 0 is a fresh causal prefill; resumed chunks additionally attend
-        to the cached prefix through the block table."""
-        tokens = np.zeros((1, pad), np.int32)
-        tokens[0, :n] = req.prompt[start:start + n]
-        sm = self.pool.prefill_slot_mapping(req.uid, start, n, pad)[None]
-        if start == 0:
-            logits, self.pool.pages = self._prefill(
-                self.params, self.buffers, jnp.asarray(tokens),
-                self.pool.pages, jnp.asarray(sm))
+    # -- preemption ---------------------------------------------------------
+    def _decode_ready(self, req: Request) -> bool:
+        """Prefill source fully cached and the next input token sampled."""
+        return bool(req.generated) and \
+            req.prefill_pos >= len(req.prefill_source())
+
+    def _youngest_slot(self) -> Optional[int]:
+        occ = [(s.arrival, s.uid, i)
+               for i, s in enumerate(self.slots) if s is not None]
+        return max(occ)[2] if occ else None
+
+    def _preempt(self, slot: int) -> None:
+        """Evict the resident in ``slot`` and requeue it at the head of the
+        waiting line.  ``eviction="recompute"`` frees its blocks and arms a
+        recompute-prefill over prompt + generated-so-far (whose final logits
+        re-produce exactly the token the interrupted decode step would have);
+        ``eviction="swap"`` copies the cached prefix to host memory instead,
+        restored block-exactly at re-admission."""
+        req = self.slots[slot]
+        req.preempted_at.append(len(req.generated))
+        if self.scfg.eviction == "swap":
+            # cached tokens from *request* state: prompt + generated minus the
+            # not-yet-written last token (decode-ready), or the prefill cursor
+            if self._decode_ready(req):
+                cached = len(req.prompt) + len(req.generated) - 1
+                req.prefill_src = np.concatenate(
+                    [req.prompt,
+                     np.asarray(req.generated[:-1], np.int32)])
+                req.prefill_pos = cached
+            else:
+                cached = req.prefill_pos
+            req.swapped = self.bm.preempt_swap_out(req.uid, cached)
         else:
-            bt = self.pool.block_table_array([req.uid],
-                                             self.scfg.max_blocks_per_seq)
-            logits, self.pool.pages = self._prefill_resume(
-                self.params, self.buffers, jnp.asarray(tokens),
-                self.pool.pages, jnp.asarray(sm),
-                jnp.asarray(start, jnp.int32), jnp.asarray(bt),
-                jnp.asarray([start], jnp.int32))
-        req.prefill_pos = start + n
+            if req.generated:
+                req.prefill_src = np.concatenate(
+                    [req.prompt, np.asarray(req.generated, np.int32)])
+            req.prefill_pos = 0
+            self.bm.preempt_recompute(req.uid)
+        self.slots[slot] = None
+        self.waiting.appendleft(req)
+
+    def _grow_or_preempt(self, req: Request, length: int) -> bool:
+        """Grow ``req``'s chain to ``length`` tokens, preempting the youngest
+        resident until the allocation fits.  Returns False iff ``req`` itself
+        was the youngest and got evicted (caller drops it this step).
+        Terminates: every retry removes one resident, and a lone resident's
+        worst case fits the pool (enforced at ``submit``)."""
+        while True:
+            try:
+                self.bm.grow(req.uid, length)
+                return True
+            except OutOfBlocks:
+                slot = self._youngest_slot()
+                if slot is None:
+                    raise
+                victim = self.slots[slot]
+                self._preempt(slot)
+                if victim is req:
+                    return False
+
+    # -- chunked / batched prefill ------------------------------------------
+    def _sample_prefill_token(self, req: Request, last_row) -> None:
+        """Sample the token that follows a completed (re)prefill from its
+        final logits row.  The PRNG count is ``len(generated)``: 0 for a
+        fresh prompt (the request's first token), ``k`` after a recompute —
+        re-drawing exactly the token the interrupted decode step would have
+        produced, so preemption never changes the stream."""
+        if req.temperature > 0:
+            tok = int(np.asarray(self._sample(
+                last_row[None],
+                jnp.asarray([req.temperature], jnp.float32),
+                jnp.asarray([req.top_p], jnp.float32),
+                jnp.asarray([req.seed], jnp.int32),
+                jnp.asarray([len(req.generated)], jnp.int32)))[0])
+        else:
+            tok = int(jnp.argmax(last_row))
+        req.generated.append(tok)
+        if req.first_token_step < 0:        # TTFT survives preemption
+            req.first_token_wall = time.perf_counter()
+            req.first_token_step = self.t
+
+    def _run_oneshot(self, slot: int, req: Request) -> None:
+        """Whole-source causal prefill in one call, padded to the bucket."""
+        src = req.prefill_source()
+        sp = len(src)
+        if not self._grow_or_preempt(req, sp):
+            return                          # req evicted itself — retry later
+        pad = -(-sp // self.scfg.prefill_bucket) * self.scfg.prefill_bucket
+        tokens = np.zeros((1, pad), np.int32)
+        tokens[0, :sp] = src
+        sm = self.pool.prefill_slot_mapping(req.uid, 0, sp, pad)[None]
+        logits, self.pool.pages = self._prefill(
+            self.params, self.buffers, jnp.asarray(tokens),
+            self.pool.pages, jnp.asarray(sm))
+        req.prefill_pos = sp
         self.prefill_chunks += 1
-        return logits
+        self._prefill_lanes_total += 1
+        self._sample_prefill_token(req, logits[0, sp - 1])
+        self._maybe_finish(slot, req.generated[-1])
 
     def _prefill_work(self) -> None:
-        """Spend this step's prefill token budget on mid-prefill slots, FCFS
-        by arrival.  ``prefill_chunk_tokens == 0`` means no budget cap: every
-        newly admitted prompt prefills whole in one call (one-shot mode)."""
-        chunk = self.scfg.prefill_chunk_tokens
-        left = chunk if chunk > 0 else None
-        while left is None or left > 0:
-            cand = [(s.arrival, i) for i, s in enumerate(self.slots)
-                    if s is not None and s.prefill_pos < len(s.prompt)]
-            if not cand:
-                return
-            _, slot = min(cand)
+        """Advance mid-prefill residents.  One-shot mode (``chunk == 0``):
+        each pending prompt prefills whole, FCFS.  Chunked mode: pack the
+        next ``prefill_chunk_tokens``-token chunk of up to ``chunk_lanes``
+        lanes (FCFS by arrival) into ONE fixed-shape forward — per-lane
+        ``chunk_start``/``prefix_lens`` vectors give every lane its own
+        offset causal mask against its own paged prefix."""
+        scfg = self.scfg
+        chunk = scfg.prefill_chunk_tokens
+        if chunk <= 0:
+            while True:
+                cand = [(s.arrival, s.uid, i)
+                        for i, s in enumerate(self.slots)
+                        if s is not None
+                        and s.prefill_pos < len(s.prefill_source())]
+                if not cand:
+                    return
+                _, _, slot = min(cand)
+                self._run_oneshot(slot, self.slots[slot])
+        # chunked: FCFS-select lanes, growing each chain for its chunk
+        # (growth may preempt residents — including already-selected lanes)
+        cand = sorted((s.arrival, s.uid, i)
+                      for i, s in enumerate(self.slots)
+                      if s is not None
+                      and s.prefill_pos < len(s.prefill_source()))
+        selected: List[Tuple[int, Request, int, int]] = []
+        for _, _, slot in cand:
+            if len(selected) >= scfg.chunk_lanes:
+                break
             req = self.slots[slot]
-            sp = len(req.prompt)
-            start = req.prefill_pos
-            if left is None:                # one-shot: whole (padded) prompt
-                n = sp - start
-                pad = -(-sp // self.scfg.prefill_bucket) * self.scfg.prefill_bucket
-            else:                           # fixed chunk shape → one compile
-                n = min(chunk, sp - start, left)
-                pad = chunk
-                left -= n
-            logits = self._run_chunk(req, start, n, pad)
-            if req.prefill_pos >= sp:       # final chunk → sample first token
-                if req.temperature > 0:
-                    first = int(np.asarray(self._sample(
-                        logits[:, n - 1],
-                        jnp.asarray([req.temperature], jnp.float32),
-                        jnp.asarray([req.top_p], jnp.float32),
-                        jnp.asarray([req.seed], jnp.int32),
-                        jnp.asarray([0], jnp.int32)))[0])
-                else:
-                    first = int(jnp.argmax(logits[0, n - 1]))
-                req.generated.append(first)
-                req.first_token_wall = time.perf_counter()
-                req.first_token_step = self.t
-                self._maybe_finish(slot, first)
+            if req is None:                 # evicted by an earlier growth
+                continue
+            n = min(chunk, len(req.prefill_source()) - req.prefill_pos)
+            if self._grow_or_preempt(req, req.prefill_pos + n):
+                selected.append((slot, req, req.prefill_pos, n))
+        selected = [(s, r, st, n) for s, r, st, n in selected
+                    if self.slots[s] is r]  # drop lanes evicted after selection
+        if not selected:
+            return
+        lanes = scfg.chunk_lanes
+        tokens = np.zeros((lanes, chunk), np.int32)
+        sms = np.full((lanes, chunk), self.pool.oob_slot, np.int32)
+        starts = np.zeros((lanes,), np.int32)
+        seq_ids: List[Optional[int]] = [None] * lanes
+        for lane, (slot, req, start, n) in enumerate(selected):
+            tokens[lane, :n] = req.prefill_source()[start:start + n]
+            sms[lane] = self.pool.prefill_slot_mapping(req.uid, start, n, chunk)
+            starts[lane] = start            # chunk offset == cached prefix len
+            seq_ids[lane] = req.uid
+        bt = self.pool.block_table_array(seq_ids, scfg.max_blocks_per_seq)
+        logits, self.pool.pages = self._prefill_batch(
+            self.params, self.buffers, jnp.asarray(tokens), self.pool.pages,
+            jnp.asarray(sms), jnp.asarray(starts), jnp.asarray(bt),
+            jnp.asarray(starts))
+        self.prefill_chunks += 1
+        self._prefill_lanes_total += len(selected)
+        for lane, (slot, req, start, n) in enumerate(selected):
+            req.prefill_pos = start + n
+            if req.prefill_pos >= len(req.prefill_source()):
+                self._sample_prefill_token(req, logits[lane, n - 1])
+                self._maybe_finish(slot, req.generated[-1])
 
     # -- retirement ---------------------------------------------------------
     def _maybe_finish(self, slot: int, token: int) -> None:
@@ -420,7 +566,7 @@ class Scheduler:
         else:
             return
         req.finish_step = self.t
-        self.pool.free_seq(req.uid)         # blocks recycle immediately
+        self.bm.release(req.uid)            # blocks recycle immediately
         self.finished.append(req)
         self.slots[slot] = None
 
@@ -431,12 +577,24 @@ class Scheduler:
         self._prefill_work()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         self.peak_slots = max(self.peak_slots, len(occupied))
-        # decode lanes: slots whose prompt is fully in the pool (mid-prefill
-        # slots sit out this decode step — their lane is masked by length 0)
-        active = [i for i in occupied
-                  if self.slots[i].prefill_pos >= len(self.slots[i].prompt)]
+        # decode lanes: slots whose prefill source is fully cached.  Grow
+        # each chain one token, oldest lane first — growth may preempt the
+        # youngest residents (who then sit out this step in the queue).
+        grown: Dict[int, int] = {}          # slot → position of the new token
+        order = sorted((self.slots[i].arrival, self.slots[i].uid, i)
+                       for i in occupied if self._decode_ready(self.slots[i]))
+        for _, _, i in order:
+            req = self.slots[i]
+            if req is None:
+                continue                    # evicted by an older lane's growth
+            cur = self.pool.length(req.uid)
+            if self._grow_or_preempt(req, cur + 1):
+                grown[i] = cur
+        active = [i for i in grown if self.slots[i] is not None]
+        self._occupancy.append(
+            self.pool.allocator.num_used / self.pool.num_blocks)
         if not active:
-            if not occupied and not self.waiting:
+            if all(s is None for s in self.slots) and not self.waiting:
                 return False
             self.t += 1                     # waiting on arrivals or prefill
             return True
@@ -453,8 +611,7 @@ class Scheduler:
         positions = [0] * B
         for i in active:
             req = self.slots[i]
-            cur = self.pool.length(req.uid)
-            self.pool.ensure_capacity(req.uid, cur + 1)   # may grow one block
+            cur = grown[i]                  # chain already grown above
             tokens[i, 0] = req.generated[-1]
             lengths[i] = cur + 1
             seq_ids[i] = req.uid
@@ -522,7 +679,16 @@ class Scheduler:
             peak_slots=self.peak_slots, pool_high_water_blocks=hw,
             pool_block_size=self.scfg.block_size,
             naive_blocks=self.naive_blocks,
-            block_reuse_ratio=self.naive_blocks / max(hw, 1))
+            block_reuse_ratio=self.naive_blocks / max(hw, 1),
+            admission=self.scfg.admission,
+            preemptions=self.bm.preemptions,
+            preempted_requests=sum(1 for r in fin if r.preempted_at),
+            swap_outs=self.bm.swap_outs, swap_ins=self.bm.swap_ins,
+            swapped_bytes=self.bm.swapped_bytes,
+            mean_occupancy=(float(np.mean(self._occupancy))
+                            if self._occupancy else 0.0),
+            mean_prefill_batch=(self._prefill_lanes_total
+                                / max(self.prefill_chunks, 1)))
 
 
 def generate_paged(params, buffers, cfg: ModelConfig, prompts: jnp.ndarray,

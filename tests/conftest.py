@@ -2,6 +2,7 @@
 (the 512-device override belongs to launch/dryrun.py only).  Multi-device
 sharding tests spawn subprocesses with their own env."""
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +10,17 @@ import pytest
 
 from repro.configs import get_config
 from repro.configs.base import EliteKVConfig
+
+
+@pytest.fixture(scope="session")
+def stress_blocks():
+    """Pool-size override for serving-scheduler tests.  The CI serving-stress
+    job sets ``REPRO_SERVE_STRESS_BLOCKS`` to a deliberately tiny pool so the
+    scheduler tests run under constant preemption pressure — the tests'
+    token-identity assertions must hold regardless (preemption is invisible
+    in the output stream).  Returns ``f(default) -> num_blocks``."""
+    override = os.environ.get("REPRO_SERVE_STRESS_BLOCKS")
+    return (lambda default: int(override)) if override else (lambda default: default)
 
 
 @pytest.fixture(scope="session")

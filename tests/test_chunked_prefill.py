@@ -20,17 +20,19 @@ from repro.runtime import serve_loop
 
 
 def _run_stream(params, buffers, cfg, chunk, *, temp=0.0, top_p=1.0,
-                seeds=None, n_req=4, max_new=6, block_size=4, seed=3):
+                seeds=None, n_req=4, max_new=6, block_size=4, seed=3,
+                num_blocks=64, lanes=1, max_slots=2, arrival_gap=0.7):
     scfg = serve_loop.SchedulerConfig(
-        max_slots=2, block_size=block_size, num_blocks=64, max_len=48,
-        prefill_bucket=4, prefill_chunk_tokens=chunk)
+        max_slots=max_slots, block_size=block_size, num_blocks=num_blocks,
+        max_len=48, prefill_bucket=4, prefill_chunk_tokens=chunk,
+        prefill_batch_lanes=lanes)
     sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
     rng = np.random.default_rng(seed)
     reqs = [serve_loop.Request(
         uid=i,
         prompt=rng.integers(0, cfg.vocab_size,
                             int(rng.integers(5, 18))).astype(np.int32),
-        max_new_tokens=max_new, arrival=i * 0.7,
+        max_new_tokens=max_new, arrival=i * arrival_gap,
         temperature=temp, top_p=top_p,
         seed=(seeds[i] if seeds else 0)) for i in range(n_req)]
     report = sched.run(reqs)
@@ -46,15 +48,64 @@ def _run_stream(params, buffers, cfg, chunk, *, temp=0.0, top_p=1.0,
     5,          # divides neither the prompts nor the pool blocks
     32,         # >= every prompt: degenerates to one chunk
 ])
-def test_chunked_prefill_token_parity(tiny_elite_cfg, tiny_elite_model, chunk):
+def test_chunked_prefill_token_parity(tiny_elite_cfg, tiny_elite_model, chunk,
+                                      stress_blocks):
     params, buffers = tiny_elite_model
-    base, base_rep = _run_stream(params, buffers, tiny_elite_cfg, 0)
-    out, rep = _run_stream(params, buffers, tiny_elite_cfg, chunk)
+    nb = stress_blocks(64)
+    base, base_rep = _run_stream(params, buffers, tiny_elite_cfg, 0,
+                                 num_blocks=nb)
+    out, rep = _run_stream(params, buffers, tiny_elite_cfg, chunk,
+                           num_blocks=nb)
     assert out == base
     assert rep.completed == base_rep.completed == 4
     # chunking really split the work (except the degenerate full-prompt size)
     if chunk < 18:
         assert rep.prefill_chunks > base_rep.prefill_chunks
+
+
+# ---------------------------------------------------------------------------
+# batched multi-sequence prefill == one-request-per-chunk (PR-3 path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [
+    4,          # == block_size: chunk boundaries land on block boundaries
+    5,          # divides neither the prompts nor the pool blocks
+    8,          # 2 blocks per chunk
+])
+@pytest.mark.parametrize("lanes", [2, 3])
+def test_batched_prefill_token_parity(tiny_elite_cfg, tiny_elite_model, chunk,
+                                      lanes, stress_blocks):
+    """N requests' chunks packed into one forward (per-lane chunk_start /
+    prefix_lens vectors) must generate the same tokens as the single-lane
+    path AND as one-shot prefill — simultaneous arrivals force multiple
+    mid-prefill lanes to coexist, so chunks of different sequences really
+    share forwards."""
+    params, buffers = tiny_elite_model
+    nb = stress_blocks(64)
+    kw = dict(n_req=5, max_slots=3, arrival_gap=0.0, num_blocks=nb)
+    base, _ = _run_stream(params, buffers, tiny_elite_cfg, 0, **kw)
+    single, rep1 = _run_stream(params, buffers, tiny_elite_cfg, chunk,
+                               lanes=1, **kw)
+    packed, repn = _run_stream(params, buffers, tiny_elite_cfg, chunk,
+                               lanes=lanes, **kw)
+    assert packed == single == base
+    assert repn.mean_prefill_batch > 1.0       # packing actually happened
+    assert rep1.mean_prefill_batch == 1.0
+    # packing several lanes per forward issues fewer prefill calls
+    assert repn.prefill_chunks < rep1.prefill_chunks
+
+
+def test_batched_prefill_sampling_parity(tiny_elite_cfg, tiny_elite_model):
+    """Per-request seeded sampling is invariant to prefill packing: the PRNG
+    is keyed on (seed, token index), never on lane or forward composition."""
+    params, buffers = tiny_elite_model
+    seeds = [7, 8, 9, 10, 11]
+    kw = dict(n_req=5, max_slots=3, arrival_gap=0.0, temp=0.9, top_p=0.8,
+              seeds=seeds)
+    single, _ = _run_stream(params, buffers, tiny_elite_cfg, 5, lanes=1, **kw)
+    packed, rep = _run_stream(params, buffers, tiny_elite_cfg, 5, lanes=3, **kw)
+    assert packed == single
+    assert rep.mean_prefill_batch > 1.0
 
 
 def test_chunk_equal_to_block_crosses_boundaries(tiny_elite_cfg, tiny_elite_model):

@@ -103,6 +103,43 @@ def test_flash_prefill_resumed_chunk(off, Sq, Sk, bq, bk):
                                atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("offs,lens,bq,bk", [
+    ([0, 16, 48], None, 16, 16),           # mixed fresh + resumed lanes
+    ([32, 8, 0], [64, 24, 16], 16, 32),    # per-lane padded key tails
+    ([48, 48, 48], [64, 64, 0], 16, 16),   # a dead lane (kv_len 0 → zeros)
+])
+def test_flash_prefill_per_lane_vectors(offs, lens, bq, bk):
+    """Per-lane q_offsets/kv_lens: each lane of one packed call must equal a
+    separate single-lane call with that lane's scalar offset — the batched
+    chunked-prefill contract (chunks of different sequences, one forward)."""
+    nh, nkv, dh, Sq, Sk = 4, 2, 32, 16, 64
+    B = len(offs)
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, Sq, nh, dh))
+    k = jax.random.normal(ks[1], (B, Sk, nkv, dh))
+    v = jax.random.normal(ks[2], (B, Sk, nkv, dh))
+    offs_a = jnp.asarray(offs, jnp.int32)
+    lens_a = None if lens is None else jnp.asarray(lens, jnp.int32)
+    o_k = fp.flash_prefill(q, k, v, nh // nkv, dh ** -0.5, block_q=bq,
+                           block_k=bk, q_offset=offs_a, kv_lens=lens_a,
+                           interpret=True)
+    o_r = ref.flash_prefill_ref(q, k, v, nh // nkv, dh ** -0.5,
+                                q_offset=offs_a, kv_lens=lens_a)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=2e-5, rtol=2e-5)
+    for b in range(B):
+        if lens is not None and lens[b] < Sq + offs[b]:
+            continue                       # scalar int path asserts Sk bounds
+        o_b = fp.flash_prefill(q[b:b + 1], k[b:b + 1], v[b:b + 1], nh // nkv,
+                               dh ** -0.5, block_q=bq, block_k=bk,
+                               q_offset=offs[b], interpret=True)
+        if lens is None or lens[b] == Sk:
+            np.testing.assert_allclose(np.asarray(o_k[b]), np.asarray(o_b[0]),
+                                       atol=2e-5, rtol=2e-5)
+    if lens is not None and lens[-1] == 0:
+        assert float(jnp.max(jnp.abs(o_k[-1]))) == 0.0
+
+
 @pytest.mark.parametrize("S,H,r,bs", [(64, 4, 4, 16), (32, 2, 8, 32), (128, 1, 2, 64)])
 def test_rope_elite_sweep(S, H, r, bs):
     key = jax.random.PRNGKey(2)

@@ -1,0 +1,185 @@
+"""Preemption-based block management: the golden invariant and the machinery.
+
+Golden tier: with the pool shrunk until residents collide (``OutOfBlocks``
+mid-flight), the preempting scheduler must produce *token-identical* output
+to the legacy watermark-reservation policy on an ample pool — including
+sequences preempted mid-decode whose prefix is recomputed (or host-swapped)
+and whose interrupted token is re-drawn from the same logits.  Mechanism
+tier: BlockManager admission policies, swap-out/in page fidelity, and
+eviction bookkeeping (no leaks, blocks all return).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import BlockManager, OutOfBlocks, PagedKVPool
+from repro.models import lm
+from repro.runtime import serve_loop
+
+
+def _workload(cfg, n_req=4, seed=3, temp=0.0, max_new=10):
+    rng = np.random.default_rng(seed)
+    return [serve_loop.Request(
+        uid=i,
+        prompt=rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(8, 18))).astype(np.int32),
+        max_new_tokens=max_new, arrival=i * 0.5,
+        temperature=temp, top_p=0.9, seed=11 + i) for i in range(n_req)]
+
+
+def _run(params, buffers, cfg, *, num_blocks, admission="preempt",
+         eviction="recompute", chunk=4, temp=0.0, max_slots=2):
+    scfg = serve_loop.SchedulerConfig(
+        max_slots=max_slots, block_size=4, num_blocks=num_blocks, max_len=48,
+        prefill_bucket=4, prefill_chunk_tokens=chunk,
+        admission=admission, eviction=eviction)
+    sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+    report = sched.run(_workload(cfg, temp=temp))
+    return {r.uid: list(r.generated) for r in sched.finished}, report, sched
+
+
+# ---------------------------------------------------------------------------
+# golden invariant: preemption never changes tokens
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eviction", ["recompute", "swap"])
+def test_preemption_tokens_match_watermark(tiny_elite_cfg, tiny_elite_model,
+                                           eviction, stress_blocks):
+    """Tiny pool → forced preemptions (including mid-decode, with generated
+    tokens recomputed/swapped); output must equal the reservation policy on
+    an ample pool, token for token."""
+    params, buffers = tiny_elite_model
+    base, base_rep, _ = _run(params, buffers, tiny_elite_cfg,
+                             num_blocks=64, admission="watermark")
+    assert base_rep.preemptions == 0       # watermark never evicts
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg,
+                           num_blocks=stress_blocks(9), eviction=eviction)
+    assert out == base
+    assert rep.completed == base_rep.completed == 4
+    assert rep.preemptions > 0             # the tiny pool really forced evictions
+    # at least one request was preempted mid-decode (generated tokens already
+    # out) and still reproduced its stream exactly
+    assert any(p > 0 for r in sched.finished for p in r.preempted_at)
+    if eviction == "swap":
+        assert rep.swap_outs > 0 and rep.swap_ins == rep.swap_outs
+    # every block returned despite the eviction churn
+    assert sched.pool.allocator.num_free == sched.pool.num_blocks
+
+
+@pytest.mark.parametrize("eviction", ["recompute", "swap"])
+def test_preemption_sampled_tokens_match(tiny_elite_cfg, tiny_elite_model,
+                                         eviction, stress_blocks):
+    """Seeded nucleus sampling is preemption-invariant: the re-drawn token
+    after a recompute uses the same (seed, token-index) PRNG fold as the
+    interrupted decode step would have."""
+    params, buffers = tiny_elite_model
+    base, _, _ = _run(params, buffers, tiny_elite_cfg, num_blocks=64,
+                      admission="watermark", temp=0.8)
+    out, rep, _ = _run(params, buffers, tiny_elite_cfg,
+                       num_blocks=stress_blocks(9), eviction=eviction,
+                       temp=0.8)
+    assert rep.preemptions > 0
+    assert out == base
+
+
+def test_oneshot_mode_survives_preemption(tiny_elite_cfg, tiny_elite_model,
+                                          stress_blocks):
+    """chunk=0 (whole-prompt admission prefill) under a tiny pool: the
+    recompute path runs through the one-shot forward too."""
+    params, buffers = tiny_elite_model
+    base, _, _ = _run(params, buffers, tiny_elite_cfg, num_blocks=64,
+                      admission="watermark", chunk=0)
+    out, rep, _ = _run(params, buffers, tiny_elite_cfg,
+                       num_blocks=stress_blocks(9), chunk=0)
+    assert out == base
+    assert rep.preemptions > 0
+
+
+def test_preempt_beats_watermark_occupancy(tiny_elite_cfg, tiny_elite_model):
+    """On the same small pool, dropping the reservation raises pool occupancy
+    and completes the identical request set — the point of the refactor."""
+    params, buffers = tiny_elite_model
+    wm, wm_rep, _ = _run(params, buffers, tiny_elite_cfg, num_blocks=12,
+                         admission="watermark")
+    pr, pr_rep, _ = _run(params, buffers, tiny_elite_cfg, num_blocks=12)
+    assert pr == wm
+    assert pr_rep.completed == wm_rep.completed == 4
+    assert pr_rep.mean_occupancy > wm_rep.mean_occupancy
+
+
+# ---------------------------------------------------------------------------
+# BlockManager mechanism
+# ---------------------------------------------------------------------------
+
+def test_block_manager_policies(tiny_elite_cfg):
+    pool = PagedKVPool(tiny_elite_cfg, num_blocks=8, block_size=4)
+    wm = BlockManager(pool, policy="watermark")
+    wm.register(0, 6)                      # resident owed 6 blocks, owns 0
+    assert wm.reserved_blocks == 6
+    assert not wm.can_admit(4, 4)          # 8 free - 6 reserved < 4
+    assert wm.can_admit(4, 2)
+    wm.grow(0, 9)                          # owns 3 → owed shrinks to 3
+    assert wm.reserved_blocks == 3
+    wm.release(0)
+    assert wm.reserved_blocks == 0 and pool.allocator.num_free == 8
+
+    pr = BlockManager(pool, policy="preempt")
+    pr.register(1, 6)
+    # preempt admits on the *next allocation*, not the worst case
+    assert pr.can_admit(8 * 4, 999) and not pr.can_admit(8 * 4 + 1, 0)
+
+
+def test_swap_roundtrip_restores_pages(tiny_elite_cfg, tiny_elite_model):
+    """Swap-out → swap-in onto a *different* chain reproduces the cached
+    streams slot-exactly for the tokens the sequence owns."""
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    bs, sp = 4, 11
+    pool = PagedKVPool(cfg, num_blocks=16, block_size=bs)
+    bm = BlockManager(pool)
+    pool.ensure_capacity(0, sp)
+    tokens = np.zeros((1, 12), np.int32)
+    tokens[0, :sp] = np.arange(sp) % cfg.vocab_size
+    sm = pool.prefill_slot_mapping(0, 0, sp, 12)[None]
+    _, pool.pages = lm.apply_prefill_paged(
+        params, buffers, cfg, {"tokens": jnp.asarray(tokens)}, pool.pages,
+        jnp.asarray(sm))
+
+    def live(table):
+        slots = [b * bs + i for b in table for i in range(bs)][:sp]
+        return (np.asarray(pool.pages["p0"]["k_e"])[:, slots].copy(),
+                np.asarray(pool.pages["p0"]["c"])[:, slots].copy())
+
+    before = live(pool.block_table(0))
+    old_table = pool.block_table(0)
+    swapped = bm.preempt_swap_out(0, sp)
+    assert swapped.length == sp and pool.block_table(0) == []
+    assert bm.preemptions == bm.swap_outs == 1
+    # occupy a block so the restored chain cannot be identical
+    pool.ensure_capacity(99, 2)
+    bm.swap_in(0, swapped)
+    assert pool.length(0) == sp
+    assert pool.block_table(0) != old_table
+    after = live(pool.block_table(0))
+    np.testing.assert_allclose(after[0], before[0], atol=0, rtol=0)
+    np.testing.assert_allclose(after[1], before[1], atol=0, rtol=0)
+
+
+def test_swap_in_raises_when_pool_full(tiny_elite_cfg):
+    pool = PagedKVPool(tiny_elite_cfg, num_blocks=4, block_size=4)
+    bm = BlockManager(pool)
+    pool.ensure_capacity(0, 12)            # 3 blocks
+    swapped = bm.preempt_swap_out(0, 12)
+    pool.ensure_capacity(7, 9)             # steal 3 of 4 blocks
+    with pytest.raises(OutOfBlocks):
+        bm.swap_in(0, swapped)
+
+
+def test_preempt_zero_cached_is_plain_requeue(tiny_elite_cfg):
+    pool = PagedKVPool(tiny_elite_cfg, num_blocks=4, block_size=4)
+    bm = BlockManager(pool)
+    assert bm.preempt_swap_out(0, 0) is None
+    assert bm.preemptions == 1 and bm.swap_outs == 0

@@ -111,6 +111,59 @@ def test_ssm_scan_chunk_invariance(chunk, seed):
     np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4, rtol=1e-4)
 
 
+_BM_OPS = st.lists(
+    st.tuples(st.sampled_from(["grow", "free", "swap_out", "swap_in"]),
+              st.integers(0, 3),            # seq id
+              st.integers(1, 40)),          # target token count (grow)
+    min_size=1, max_size=40)
+
+
+@given(ops=_BM_OPS, num_blocks=st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_block_manager_never_leaks_or_double_frees(ops, num_blocks):
+    """Arbitrary alloc/free/preempt(swap) interleavings on a tiny pool keep
+    the allocator exactly conserved: free + owned == capacity, chains stay
+    disjoint, no block is ever double-freed or leaked — even when operations
+    bounce off ``OutOfBlocks``."""
+    import dataclasses as dc
+    from repro.configs import get_config
+    from repro.configs.base import EliteKVConfig
+    from repro.core.cache import BlockManager, OutOfBlocks, PagedKVPool
+    cfg = dc.replace(
+        get_config("tinyllama_1_1b").reduced(num_layers=2, vocab_size=64),
+        elitekv=EliteKVConfig(enabled=True, elite_r=2, d_ckv=8))
+    pool = PagedKVPool(cfg, num_blocks=num_blocks, block_size=4)
+    bm = BlockManager(pool)
+    swapped = {}
+
+    def check():
+        alloc = pool.allocator
+        assert alloc.num_free + alloc.num_used == num_blocks
+        owned = [b for sid in list(pool._tables) for b in pool.block_table(sid)]
+        assert len(owned) == len(set(owned)), "chains share a block"
+        assert len(owned) == alloc.num_used, "leak or double-free"
+        assert not set(owned) & set(alloc._free), "owned block on free list"
+
+    for op, sid, tokens in ops:
+        try:
+            if op == "grow":
+                bm.grow(sid, tokens)
+            elif op == "free":
+                bm.release(sid)
+            elif op == "swap_out":
+                s = bm.preempt_swap_out(sid, pool.length(sid))
+                if s is not None:
+                    swapped[sid] = s
+            elif op == "swap_in" and sid in swapped and not pool.block_table(sid):
+                bm.swap_in(sid, swapped.pop(sid))
+        except OutOfBlocks:
+            pass                            # valid outcome; state must stay sane
+        check()
+    for sid in list(pool._tables):
+        bm.release(sid)
+    assert pool.allocator.num_free == num_blocks
+
+
 @given(B=st.integers(1, 3), length=st.integers(1, 32), seed=st.integers(0, 50))
 @settings(max_examples=10, deadline=None)
 def test_elite_decode_kernel_vs_oracle_property(B, length, seed):
