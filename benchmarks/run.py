@@ -258,6 +258,30 @@ def cache_table():
 # measures request throughput, not lockstep decode)
 # ---------------------------------------------------------------------------
 
+def serving_workload(rate: float, vocab_size: int = 128, n: int = 12,
+                     seed: int = 7, sample_seed: int = 1000,
+                     temperature: float = 0.0, top_p: float = 1.0):
+    """Deterministic serving workload: bimodal prompt lengths (short
+    interactive requests racing long ones — the case chunked prefill exists
+    for), Poisson arrivals, and **pinned per-request sample seeds**
+    (``sample_seed + uid``) so every comparison row — chunked vs one-shot,
+    watermark vs preempt, speculative vs plain — decodes the *identical*
+    request set and is token-comparable.  Two calls with the same arguments
+    return identical requests (regression-tested)."""
+    from repro.runtime import serve_loop
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        sp = int(rng.integers(4, 9)) if i % 2 else int(rng.integers(24, 41))
+        reqs.append(serve_loop.Request(
+            uid=i,
+            prompt=rng.integers(0, vocab_size, sp).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 17)), arrival=t,
+            temperature=temperature, top_p=top_p, seed=sample_seed + i))
+    return reqs
+
+
 def serving():
     from repro.runtime import serve_loop
 
@@ -266,36 +290,26 @@ def serving():
         cfg, elitekv=EliteKVConfig(enabled=True, elite_r=4, d_ckv=64))
     params, buffers = lm.init(jax.random.PRNGKey(0), cfg)
 
-    def workload(rate):
-        """Bimodal prompt lengths: short interactive requests racing long
-        ones — the case chunked prefill exists for."""
-        rng = np.random.default_rng(7)
-        t, reqs = 0.0, []
-        for i in range(12):
-            t += rng.exponential(1.0 / rate)
-            sp = int(rng.integers(4, 9)) if i % 2 else int(rng.integers(24, 41))
-            reqs.append(serve_loop.Request(
-                uid=i,
-                prompt=rng.integers(0, cfg.vocab_size, sp).astype(np.int32),
-                max_new_tokens=int(rng.integers(4, 17)), arrival=t))
-        return reqs
-
     def run_one(rate, chunk, num_blocks=96, admission="preempt",
-                eviction="recompute", lanes=0):
+                eviction="recompute", lanes=0, speculate=0, draft_rank=0):
         scfg = serve_loop.SchedulerConfig(
             max_slots=4, block_size=8, num_blocks=num_blocks,
             max_new_tokens=16, max_len=64, prefill_bucket=8,
             prefill_chunk_tokens=chunk, prefill_batch_lanes=lanes,
-            admission=admission, eviction=eviction)
+            admission=admission, eviction=eviction,
+            speculate_k=speculate, draft_rank=draft_rank)
         sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
         t0 = time.time()
-        rep = sched.run(workload(rate))
+        rep = sched.run(serving_workload(rate, vocab_size=cfg.vocab_size))
         us = (time.time() - t0) * 1e6 / max(rep.decode_steps, 1)
         return sched, rep, us
 
-    for rate, tag in [(2.0, "bursty"), (0.4, "trickle")]:
+    plain_baseline = None                  # (sched, rep, us) of bursty/chunk8,
+    for rate, tag in [(2.0, "bursty"), (0.4, "trickle")]:  # reused below
         for chunk in (0, 8):               # one-shot admission vs chunked
             sched, rep, us = run_one(rate, chunk)
+            if (rate, chunk) == (2.0, 8):
+                plain_baseline = (sched, rep, us)
             buckets = ";".join(f"ttft_prompt_{k}={v:.1f}"
                                for k, v in rep.ttft_steps_by_bucket.items())
             emit(f"serving/poisson_{tag}_chunk{chunk}", us,
@@ -333,6 +347,33 @@ def serving():
              f"prefill_batch={rep.mean_prefill_batch:.2f};"
              f"tokens_match_watermark="
              f"{results[(admission, eviction)] == results[('watermark', 'recompute')]}")
+
+    # speculative vs plain decode on the identical seeded greedy workload:
+    # plain advances 1 token per lane per forward; draft/verify advances
+    # 1 + accepted.  The draft rank is a top-singular-direction truncation of
+    # the joint factors — on this random-init miniature the spectrum is
+    # nearly flat, so useful ranks sit close to d_ckv (64); a converted/
+    # uptrained model concentrates energy in far fewer directions (the
+    # paper's premise).  Greedy streams must be token-identical to plain.
+    plain_sched, plain_rep, plain_us = plain_baseline   # bursty/chunk8 run
+    plain_toks = {r.uid: list(r.generated) for r in plain_sched.finished}
+    emit("serving/spec_plain", plain_us,
+         f"tok_per_forward={plain_rep.tokens_per_forward:.2f};"
+         f"decode_steps={plain_rep.decode_steps};"
+         f"decoded={plain_rep.decoded_tokens}")
+    for spec_k, rank in [(2, 0), (2, 60), (4, 60)]:
+        sched, rep, us = run_one(2.0, 8, speculate=spec_k, draft_rank=rank)
+        toks = {r.uid: list(r.generated) for r in sched.finished}
+        buckets = ";".join(f"acc_prompt_{b}={v:.2f}"
+                           for b, v in rep.acceptance_by_bucket.items())
+        emit(f"serving/spec_k{spec_k}_rank{rank or 'full'}", us,
+             f"tok_per_forward={rep.tokens_per_forward:.2f};"
+             f"acceptance={rep.acceptance_rate:.2f};"
+             f"mean_accepted={rep.mean_accepted:.2f};{buckets};"
+             f"verify_forwards={rep.decode_steps};"
+             f"draft_forwards={rep.draft_forwards};"
+             f"decoded={rep.decoded_tokens};"
+             f"tokens_match_plain={toks == plain_toks}")
 
 
 ALL = {"table1": table1, "table2": table2, "fig5": fig5, "fig6": fig6,

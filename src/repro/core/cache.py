@@ -160,6 +160,26 @@ class PagedKVPool:
     def can_fit(self, extra_tokens: int) -> bool:
         return self.allocator.num_free * self.block_size >= extra_tokens
 
+    def truncate(self, seq_id: int, length: int) -> None:
+        """Shrink ``seq_id`` to ``length`` tokens, freeing tail blocks the
+        shorter chain no longer covers (speculative decode rolls rejected
+        verify-window tokens back through here — pages are never rewritten,
+        the stale slots are simply re-extended over by later growth).
+        ``length`` must not exceed the current length; 0 keeps the (empty)
+        chain registered."""
+        assert length >= 0, length
+        if seq_id not in self._lengths:     # unknown/freed seq: only the
+            assert length == 0, (seq_id, length)   # no-op shrink is legal,
+            return                          # and it must not register one
+        cur = self._lengths[seq_id]
+        assert length <= cur, (seq_id, length, cur)
+        table = self._tables.get(seq_id, [])
+        keep = -(-length // self.block_size)
+        if keep < len(table):
+            self.allocator.free(table[keep:])
+            del table[keep:]
+        self._lengths[seq_id] = length
+
     def free_seq(self, seq_id: int) -> None:
         self.allocator.free(self._tables.pop(seq_id, []))
         self._lengths.pop(seq_id, None)
@@ -321,6 +341,13 @@ class BlockManager:
         """Retire or evict: free the chain and drop residency."""
         self.pool.free_seq(seq_id)
         self._resident_worst.pop(seq_id, None)
+
+    def truncate(self, seq_id: int, length: int) -> None:
+        """Roll ``seq_id`` back to ``length`` tokens (rejected speculative
+        verify-window tail): tail blocks return to the free list immediately,
+        residency is kept — the watermark reservation grows back by exactly
+        the freed blocks, so both admission policies stay conserved."""
+        self.pool.truncate(seq_id, length)
 
     # -- eviction -----------------------------------------------------------
     def preempt_recompute(self, seq_id: int) -> None:

@@ -354,6 +354,62 @@ def apply_prefill_paged(params, cfg, buffers, x, positions, pages,
     return jnp.einsum("bshe,hed->bsd", o, params["wo"].astype(x.dtype)), new_pages
 
 
+def apply_verify_paged(params, cfg, buffers, x, pages, slot_mapping,
+                       block_tables, q_offsets, lengths, block_size: int,
+                       use_kernel: bool = True, constrain=lambda n, t: t):
+    """Absorbed multi-query *verify* attention for speculative decode.
+
+    A verify window is a resumed chunk of ``W = k+1`` tokens — the pending
+    token plus ``k`` draft proposals — re-scored by the full model in ONE
+    forward: lane ``b``'s window starts at global position ``q_offsets[b]``
+    and its rows attend offset-causally to the lane's paged prefix *plus* the
+    window itself (whose compressed streams are scattered into the pool
+    first, exactly like decode — so accepted tokens' cache entries are
+    final full-model values and rejected tokens are erased by truncating the
+    pool length, never by rewriting pages).
+
+    Unlike chunked-prefill's ``apply_prefill_paged`` (which gathers the
+    prefix and *materializes* K/V through bk/bv), verify stays in the
+    absorbed latent space end to end — the same compressed-stream roofline
+    as decode, with ``W·n_h`` query rows per lane.
+
+    x [B,W,d]; slot_mapping [B,W] flat pool slots (pad → sentinel);
+    q_offsets [B] window start positions; lengths [B] live length including
+    the window (0 = dead lane → zero output).  → (out [B,W,d], new_pages).
+    """
+    dt = x.dtype
+    B, W = x.shape[:2]
+    dh = cfg.head_dim
+    G = cfg.q_group
+    pos = q_offsets[:, None] + jnp.arange(W)[None, :]        # [B,W] per-lane
+
+    q_e, q_ne = _project_q(params, cfg, x, pos)
+    q_e = constrain("attn_q", _rot_q(cfg, buffers, q_e, pos))
+    bk_q = rope_lib.expand_kv_to_q(jnp.moveaxis(params["bk"], 1, 0), G)
+    q_lat = constrain("attn_q", jnp.einsum("bshn,hcn->bshc", q_ne, bk_q.astype(dt)))
+
+    k_e_new = jnp.einsum("bsd,dhe->bshe", x, params["wk_e"].astype(dt))
+    k_e_new = rope_lib.apply_elite_rope(k_e_new, pos, buffers["elite_freqs"])
+    c_k_new, c_v_new = _latents(params, cfg, x)
+    new_pages = _scatter_pages(
+        pages, k_e_new.reshape(B * W, *k_e_new.shape[2:]),
+        c_k_new.reshape(B * W, -1), c_v_new.reshape(B * W, -1),
+        slot_mapping.reshape(B * W))
+
+    from repro.kernels import ops as kops
+    K_e, (C_k, C_v) = new_pages["k_e"], _page_latents(new_pages)
+    o = kops.elite_verify_paged(
+        q_e, q_lat, K_e, C_k, C_v, block_tables, q_offsets, lengths,
+        q_group=G, scale=dh ** -0.5, block_size=block_size,
+        force_xla=not use_kernel)
+    o = o.astype(dt)                                         # [B,W,nh,d_c]
+
+    bv_q = rope_lib.expand_kv_to_q(jnp.moveaxis(params["bv"], 1, 0), G)
+    o_heads = jnp.einsum("bqhc,hcd->bqhd", o, bv_q.astype(dt))
+    out = jnp.einsum("bshe,hed->bsd", o_heads, params["wo"].astype(dt))
+    return out, new_pages
+
+
 def apply_decode_paged(params, cfg, buffers, x, pages, slot_mapping,
                        block_tables, lengths, block_size: int,
                        use_kernel: bool = True, constrain=lambda n, t: t):

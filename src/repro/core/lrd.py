@@ -14,6 +14,11 @@ split is solved exactly).
 Stage 2 of docs/architecture.md: the factors produced here become the
 ``a_kv`` / ``bk`` / ``bv`` weights whose latent stream the paged cache stores
 and the decode kernel (kernels/elite_decode.py) reads.
+
+``truncate_joint_rank`` additionally derives the *draft* factors for
+self-speculative decode (docs/serving.md): the top singular directions of the
+joint ``[bk | bv]`` factor, projected in place — no new trained weights, and
+the draft reads the same cached latent stream the full model writes.
 """
 from __future__ import annotations
 
@@ -56,6 +61,39 @@ def slrd(wk_ne: jnp.ndarray, wv: jnp.ndarray, d_ck: int, d_cv: int):
     a_k, Bk = svd_lowrank(np.asarray(wk_ne).reshape(d, nkv * d_nope), d_ck)
     a_v, Bv = svd_lowrank(np.asarray(wv).reshape(d, nkv * dh), d_cv)
     return a_k, a_v, Bk.reshape(d_ck, nkv, d_nope), Bv.reshape(d_cv, nkv, dh)
+
+
+def truncate_joint_rank(bk: jnp.ndarray, bv: jnp.ndarray, rank: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rank-truncate the joint up-projection for the *draft* model of
+    self-speculative decode (docs/serving.md).
+
+    bk [d_ckv, n_kv, d_nope]; bv [d_ckv, n_kv, d_h].  Stacks them into the
+    joint factor B^kv = [bk | bv]  [d_ckv, m], takes the top-``rank`` left
+    singular directions P [d_ckv, rank], and projects both factors onto that
+    subspace:  bk' = P Pᵀ bk,  bv' = P Pᵀ bv.  Because ``a_kv`` from
+    ``jlrd`` is orthonormal (A = U), these are exactly the top singular
+    directions of the composed W^kv ≈ a_kv·[bk|bv]; for uptrained factors
+    they remain the dominant directions of the latent→KV map.
+
+    The truncated factors keep their full shapes — only their *rank* drops —
+    so the draft decoder reads the same d_ckv-wide cached latent stream the
+    full model writes (shared pool, no second cache) while its attention
+    scores/outputs live in the rank-``rank`` subspace.  ``rank >= d_ckv``
+    returns the factors unchanged (the full-rank draft).
+    """
+    d_ckv = bk.shape[0]
+    if rank >= d_ckv:
+        return bk, bv
+    Bk = np.asarray(bk, np.float64).reshape(d_ckv, -1)
+    Bv = np.asarray(bv, np.float64).reshape(d_ckv, -1)
+    U, _, _ = np.linalg.svd(np.concatenate([Bk, Bv], axis=1),
+                            full_matrices=False)
+    proj = U[:, :rank] @ U[:, :rank].T                       # [d_ckv, d_ckv]
+    bk_r = (proj @ Bk).reshape(bk.shape)
+    bv_r = (proj @ Bv).reshape(bv.shape)
+    return (jnp.asarray(bk_r, jnp.float32).astype(bk.dtype),
+            jnp.asarray(bv_r, jnp.float32).astype(bv.dtype))
 
 
 def reconstruction_error(W: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray) -> float:

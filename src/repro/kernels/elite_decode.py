@@ -246,6 +246,148 @@ def elite_decode_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
     return out.reshape(B, nh, d_c)
 
 
+# ---------------------------------------------------------------------------
+# paged verify: k+1-token speculative windows, multi-query over the block table
+# ---------------------------------------------------------------------------
+
+def _verify_kernel(block_tables_ref,          # scalar-prefetch [B, mb] int32
+                   q_offsets_ref,             # scalar-prefetch [B] int32
+                   lengths_ref,               # scalar-prefetch [B] int32
+                   q_e_ref, q_lat_ref, k_e_ref, c_k_ref, c_v_ref,
+                   o_ref,
+                   acc_ref, m_ref, l_ref,
+                   *, block_size: int, scale: float, max_blocks: int,
+                   q_group: int):
+    """``_paged_kernel`` generalized to ``window · G`` query rows per
+    (batch, kv-head): row ``r`` holds window position ``w = r // G`` whose
+    global query position is ``q_offsets[b] + w``, so the length mask gains
+    the per-row offset-causal term of ``flash_prefill``'s diagonal —
+    speculative verify scores all ``k+1`` window tokens in one block-table
+    walk over the compressed cache."""
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    q_offset = q_offsets_ref[b]
+    start = sb * block_size
+
+    @pl.when(start < length)
+    def _step():
+        q_e = q_e_ref[0, 0]                           # [W·G, 2r]
+        q_lat = q_lat_ref[0, 0]                       # [W·G, d_c]
+        k_e = k_e_ref[0, :, 0, :]                     # [block_size, 2r]
+        c_k = c_k_ref[0]                              # [block_size, d_c]
+        s = jax.lax.dot_general(
+            q_e, k_e, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [W·G, block_size]
+        s += jax.lax.dot_general(
+            q_lat, c_k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s *= scale
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qw = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // q_group
+        s = jnp.where((pos <= q_offset + qw) & (pos < length), s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(c_v_ref.dtype), c_v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [W·G, d_c]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(sb == max_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def elite_verify_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                       block_tables, q_offsets, lengths, q_group: int,
+                       scale: float, block_size: int,
+                       interpret: bool = False):
+    """See kernels/ref.py::elite_verify_paged_ref for exact semantics.
+
+    q_e [B,W,nh,2r], q_lat [B,W,nh,d_c], pages as in ``elite_decode_paged``,
+    q_offsets [B] int32 (global position of each lane's window row 0),
+    lengths [B] int32 (live tokens *including* the window; 0 = dead lane)
+    →  o [B,W,nh,d_c].  Length-0 lanes produce zeros.
+    """
+    B, W, nh, r2 = q_e.shape
+    nkv = k_e_pages.shape[1]
+    d_c = c_k_pages.shape[-1]
+    G = q_group
+    assert nh == nkv * G, (nh, nkv, G)
+    assert k_e_pages.shape[0] % block_size == 0, (k_e_pages.shape, block_size)
+    n_blocks_pool = k_e_pages.shape[0] // block_size
+    mb = block_tables.shape[1]
+    assert block_tables.shape == (B, mb)
+    assert q_offsets.shape == (B,) and lengths.shape == (B,)
+
+    # row layout (w, g): row r of a (b, kv-head) tile is window position r // G
+    q_e_g = q_e.reshape(B, W, nkv, G, r2).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, nkv, W * G, r2)
+    q_lat_g = q_lat.reshape(B, W, nkv, G, d_c).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, nkv, W * G, d_c)
+    k_e_p = k_e_pages.reshape(n_blocks_pool, block_size, nkv, r2)
+    c_k_p = c_k_pages.reshape(n_blocks_pool, block_size, d_c)
+    c_v_p = c_v_pages.reshape(n_blocks_pool, block_size, d_c)
+
+    out = pl.pallas_call(
+        functools.partial(_verify_kernel, block_size=block_size, scale=scale,
+                          max_blocks=mb, q_group=G),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, nkv, mb),
+            in_specs=[
+                pl.BlockSpec((1, 1, W * G, r2),
+                             lambda b, h, s, bt, off, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, W * G, d_c),
+                             lambda b, h, s, bt, off, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_size, 1, r2),
+                             lambda b, h, s, bt, off, L: (bt[b, s], 0, h, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, bt, off, L: (bt[b, s], 0, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, bt, off, L: (bt[b, s], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, W * G, d_c),
+                                   lambda b, h, s, bt, off, L: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((W * G, d_c), jnp.float32),
+                pltpu.VMEM((W * G, 1), jnp.float32),
+                pltpu.VMEM((W * G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nkv, W * G, d_c), c_v_pages.dtype),
+        interpret=interpret,
+        name="elite_verify_paged",
+    )(block_tables, q_offsets, lengths, q_e_g, q_lat_g, k_e_p, c_k_p, c_v_p)
+    return out.reshape(B, nkv, W, G, d_c).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, W, nh, d_c)
+
+
+def elite_verify_paged_xla(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                           block_tables, q_offsets, lengths, q_group: int,
+                           scale: float, block_size: int):
+    """Gather-based XLA fallback for the verify kernel (CPU / rejected
+    shapes) — one gather of the compressed stream, then the dense multi-query
+    oracle; identical semantics to the Pallas block-table walk."""
+    from repro.kernels.ref import elite_verify_paged_ref
+    return elite_verify_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                                  block_tables, q_offsets, lengths, q_group,
+                                  scale, block_size)
+
+
 def elite_decode_paged_xla(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
                            block_tables, lengths, q_group: int, scale: float,
                            block_size: int):

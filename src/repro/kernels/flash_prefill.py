@@ -25,6 +25,12 @@ NOTE: the paged serving loop currently resumes chunks through the XLA gather
 path (``elite_attention._attend_resumed``); wiring this kernel to the paged
 prefix via a contiguous gather scratch is the TPU follow-up tracked in
 ROADMAP.md.
+
+The same per-lane offset-causal contract powers speculative decode's verify
+windows: a ``k+1``-token window is a resumed chunk whose queries sit at
+``q_offsets[b] + w`` — ``kernels/elite_decode.py::elite_verify_paged``
+applies exactly this mask in the *absorbed* latent space, walking the block
+table directly instead of gathering (see docs/serving.md).
 """
 from __future__ import annotations
 

@@ -47,6 +47,31 @@ def elite_decode_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
         q_group, scale, block_size, interpret=False)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("q_group", "scale", "block_size", "force_xla"))
+def elite_verify_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                       block_tables, q_offsets, lengths, q_group: int,
+                       scale: float, block_size: int, force_xla: bool = False):
+    """Speculative-verify attention over the block pool: all ``k+1`` window
+    positions of every lane scored in one pass of the compressed cache.
+
+    ``q_offsets``/``lengths`` are per-lane scalar-prefetch vectors (the same
+    machinery as ``flash_prefill``'s resumed chunks): lane ``b``'s window row
+    ``w`` sits at global position ``q_offsets[b] + w`` and sees cache
+    positions ``<= q_offsets[b] + w`` (offset-causal) below ``lengths[b]``.
+
+    TPU: Pallas kernel walking the prefetched block table (zero gather).
+    CPU / ``force_xla``: gather-based XLA fallback with identical semantics.
+    """
+    if force_xla or _interpret():
+        return _ed.elite_verify_paged_xla(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, block_tables,
+            q_offsets, lengths, q_group, scale, block_size)
+    return _ed.elite_verify_paged(
+        q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, block_tables, q_offsets,
+        lengths, q_group, scale, block_size, interpret=False)
+
+
 @functools.partial(jax.jit, static_argnames=("q_group", "scale", "block_q",
                                              "block_k"))
 def _flash_prefill_jit(q, k, v, q_offsets, kv_lens, q_group: int, scale: float,

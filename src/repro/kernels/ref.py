@@ -58,6 +58,60 @@ def elite_decode_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
                             gather(c_v_pages), lengths, q_group, scale)
 
 
+def elite_verify_ref(q_e, q_lat, k_e, c_k, c_v, q_offsets, lengths,
+                     q_group: int, scale: float) -> jnp.ndarray:
+    """Multi-query absorbed EliteKV *verify* attention (speculative decode).
+
+    A verify window is a resumed chunk of ``W`` tokens: lane ``b``'s query
+    row ``w`` sits at global position ``q_offsets[b] + w`` and sees cache key
+    ``j`` iff  ``j <= q_offsets[b] + w``  and  ``j < lengths[b]`` — the
+    offset-causal mask of ``flash_prefill_ref`` applied in the compressed
+    latent space of ``elite_decode_ref``.
+
+    q_e   [B, W, nh, 2r]   rotated elite queries (one per window position)
+    q_lat [B, W, nh, dc]   bk-absorbed non-elite queries
+    k_e   [B, S, nkv, 2r]; c_k/c_v [B, S, dc]; q_offsets/lengths [B] int32
+    →     [B, W, nh, dc]   latent outputs.  ``W == 1`` with
+    ``q_offsets == lengths - 1`` reduces exactly to ``elite_decode_ref``;
+    ``lengths == 0`` lanes output exact zeros.
+    """
+    B, W, nh, r2 = q_e.shape
+    S, nkv = k_e.shape[1], k_e.shape[2]
+    qe_g = q_e.reshape(B, W, nkv, q_group, r2)
+    ql_g = q_lat.reshape(B, W, nkv, q_group, -1)
+    s_e = jnp.einsum("bwhge,bkhe->bhgwk", qe_g, k_e,
+                     preferred_element_type=jnp.float32)
+    s_lat = jnp.einsum("bwhgc,bkc->bhgwk", ql_g, c_k,
+                       preferred_element_type=jnp.float32)
+    s = (s_e + s_lat) * scale                                # [B,nkv,G,W,S]
+    kpos = jnp.arange(S)[None, None, :]
+    mask = (kpos <= jnp.arange(W)[None, :, None]
+            + q_offsets[:, None, None]) \
+        & (kpos < lengths[:, None, None])                    # [B,W,S]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[:, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bhgwk,bkc->bwhgc", p.astype(c_v.dtype), c_v)
+    return o.reshape(B, W, nh, -1)
+
+
+def elite_verify_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                           block_tables, q_offsets, lengths, q_group: int,
+                           scale: float, block_size: int) -> jnp.ndarray:
+    """Paged verify attention: gather each lane's block chain, then the dense
+    multi-query oracle.  Same page layout as ``elite_decode_paged_ref``;
+    q_e/q_lat [B, W, nh, *], q_offsets/lengths [B] → [B, W, nh, dc]."""
+    B, mb = block_tables.shape
+
+    def gather(pages):
+        paged = pages.reshape((-1, block_size) + pages.shape[1:])
+        return paged[block_tables].reshape((B, mb * block_size) + pages.shape[1:])
+
+    return elite_verify_ref(q_e, q_lat, gather(k_e_pages), gather(c_k_pages),
+                            gather(c_v_pages), q_offsets, lengths, q_group,
+                            scale)
+
+
 def flash_prefill_ref(q, k, v, q_group: int, scale: float,
                       q_offset=0, kv_lens=None) -> jnp.ndarray:
     """Causal attention oracle.  q [B,Sq,nh,dh], k/v [B,Sk,nkv,dh] → [B,Sq,nh,dh].

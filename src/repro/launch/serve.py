@@ -28,7 +28,12 @@ or host swap with ``--eviction swap``; ``--admission watermark`` keeps the
 legacy worst-case reservation for comparison.  ``--temperature`` /
 ``--top-p`` select per-request sampling (temperature 0 = greedy); each
 request gets the PRNG seed ``--sample-seed + uid``, so reruns reproduce
-token-for-token — including across preemptions.  The run ends by printing
+token-for-token — including across preemptions.  ``--speculate K`` switches
+decode to self-speculative draft/verify macro-steps (``--draft-rank R``
+picks the rank-truncated draft; 0 = full-rank): each step proposes up to K
+tokens per resident with the cheap draft and verifies them in one
+full-model forward, advancing ``1 + accepted`` tokens per verify — greedy
+streams stay identical to plain decode.  The run ends by printing
 the scheduler metrics line:
 
     completed / decode steps / decoded tokens / tok/s — throughput
@@ -73,7 +78,8 @@ def serve_stream(params, buffers, cfg, args):
         max_len=args.prompt_len + args.new_tokens + 1,
         prefill_chunk_tokens=args.prefill_chunk,
         prefill_batch_lanes=args.prefill_lanes,
-        admission=args.admission, eviction=args.eviction)
+        admission=args.admission, eviction=args.eviction,
+        speculate_k=args.speculate, draft_rank=args.draft_rank)
     sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
     p_lo = min(4, args.prompt_len)          # sampling floors, valid even for
     n_lo = min(4, args.new_tokens)          # --prompt-len/--new-tokens < 4
@@ -98,6 +104,14 @@ def serve_stream(params, buffers, cfg, args):
               f"<= {scfg.prefill_chunk_tokens} tokens x {scfg.chunk_lanes} "
               f"lanes (mean {report.mean_prefill_batch:.2f} live) "
               f"interleaved with decode")
+    if scfg.speculate_k:
+        print(f"speculative decode [k={scfg.speculate_k} "
+              f"rank={scfg.draft_rank or 'full'}]: "
+              f"accepted {report.draft_accepted}/{report.draft_proposed} "
+              f"draft tokens (rate {report.acceptance_rate:.2f}, "
+              f"mean {report.mean_accepted:.2f}/window) over "
+              f"{report.draft_forwards} draft + {report.decode_steps} verify "
+              f"forwards -> {report.tokens_per_forward:.2f} tokens/forward")
     if report.preemptions:
         print(f"preemption [{scfg.eviction}]: {report.preemptions} evictions "
               f"across {report.preempted_requests} requests "
@@ -150,6 +164,12 @@ def main(argv=None):
                     default="recompute",
                     help="preemption mechanism: recompute the evicted prefix "
                          "or swap the cached streams to host memory")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="self-speculative decode: draft tokens per resident "
+                         "per step (0 = plain one-token decode)")
+    ap.add_argument("--draft-rank", type=int, default=0,
+                    help="joint-factor rank of the draft model (0 or >= "
+                         "d_ckv = full-rank draft, acceptance 1)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for stream requests (0 = greedy)")
     ap.add_argument("--top-p", type=float, default=1.0,

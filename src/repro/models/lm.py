@@ -142,6 +142,13 @@ def _run_layer(p, b, cfg, p_pos: int, h, positions, mode, cache, index,
             elif mode == "prefill":
                 a, new_cache = elite_attention.apply_prefill(
                     p["attn"], cfg, b, hn, positions, cache, constrain=constrain)
+            elif paged is not None and paged.get("verify"):
+                a, new_cache = elite_attention.apply_verify_paged(
+                    p["attn"], cfg, b, hn, cache, paged["slot_mapping"],
+                    paged["block_tables"], paged["q_offsets"],
+                    paged["lengths"], paged["block_size"],
+                    use_kernel=paged.get("use_kernel", True),
+                    constrain=constrain)
             elif paged is not None:
                 a, new_cache = elite_attention.apply_decode_paged(
                     p["attn"], cfg, b, hn, cache, paged["slot_mapping"],
@@ -379,6 +386,68 @@ def apply_decode_paged(params, buffers, cfg, batch, pages, slot_mapping,
         constrain=constrain, data_axes=data_axes, paged=paged)
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     return _logits(params, cfg, h, constrain), new_pages
+
+
+def apply_verify_paged(params, buffers, cfg, batch, pages, slot_mapping,
+                       block_tables, q_offsets, lengths, block_size: int,
+                       use_kernel: bool = True, moe_impl="ragged", mesh=None,
+                       constrain=_NOOP, data_axes=("data",)):
+    """Speculative-verify forward: score a ``W = k+1``-token window per lane
+    (the pending token + ``k`` draft proposals) against its paged prefix in
+    ONE call, writing the window's full-model compressed streams to the pool.
+
+    batch["tokens"] [B,W]; ``q_offsets`` [B] global position of each lane's
+    window row 0 (== that lane's cached prefix length); ``lengths`` [B] live
+    length *including* the window (0 = dead lane); ``slot_mapping`` [B,W]
+    flat write slots (pad → sentinel).  Logits row ``w`` of lane ``b`` is the
+    full model's next-token distribution after window token ``w`` — rows
+    ``0..k-1`` judge the draft proposals, row ``k`` samples the bonus token.
+    Shapes are (slots, W)-static, so one jit covers the whole serving run.
+    → (logits [B,W,V], new_pages).
+    """
+    assert cfg.elitekv.enabled, "paged serving requires an EliteKV cache"
+    h = _embed_step(params, cfg, batch)
+    paged = {"slot_mapping": slot_mapping, "block_tables": block_tables,
+             "q_offsets": q_offsets, "lengths": lengths,
+             "block_size": block_size, "use_kernel": use_kernel,
+             "verify": True}               # explicit dispatch tag, not
+    h, aux, new_pages = _scan_blocks(      # key-presence sniffing
+        params, buffers, cfg, h, None, mode="decode",
+        cache={"blocks": pages}, moe_impl=moe_impl, mesh=mesh,
+        constrain=constrain, data_axes=data_axes, paged=paged)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return _logits(params, cfg, h, constrain), new_pages
+
+
+def make_draft_params(params, cfg, draft_rank: int):
+    """Draft-model weights for self-speculative decode: every EliteKV layer's
+    joint up-projections ``bk``/``bv`` are projected onto their top
+    ``draft_rank`` singular directions (``core.lrd.truncate_joint_rank``) —
+    no new trained weights, identical pytree structure/shapes, so the draft
+    runs through the same jitted decode step and reads/writes the same paged
+    pool as the full model (``a_kv`` stays full-width: draft-written latents
+    occupy the verify-compatible layout and are overwritten by the verify
+    forward anyway).  ``draft_rank <= 0`` or ``>= d_ckv`` returns ``params``
+    unchanged (the full-rank draft, acceptance ≡ 1)."""
+    from repro.core import lrd
+    assert cfg.elitekv.enabled, "speculative decode requires an EliteKV cache"
+    if draft_rank <= 0 or draft_rank >= cfg.elitekv.d_ckv:
+        return params                       # full-rank draft (any LRD kind)
+    assert cfg.elitekv.lrd == "joint", \
+        "draft truncation targets the joint low-rank factors"
+    import numpy as np
+    draft = jax.tree.map(lambda t: t, params)            # shallow leaf copy
+    for p_key, blk in draft["blocks"].items():
+        if "bk" not in blk.get("attn", {}):
+            continue
+        bk = np.asarray(blk["attn"]["bk"])               # [n_super, d_ckv, ...]
+        bv = np.asarray(blk["attn"]["bv"])
+        outs = [lrd.truncate_joint_rank(bk[s], bv[s], draft_rank)
+                for s in range(bk.shape[0])]
+        blk["attn"] = dict(blk["attn"])
+        blk["attn"]["bk"] = jnp.stack([o[0] for o in outs])
+        blk["attn"]["bv"] = jnp.stack([o[1] for o in outs])
+    return draft
 
 
 def capture_attn_inputs(params, buffers, cfg, batch, moe_impl="ragged", mesh=None):

@@ -24,6 +24,25 @@ Decoding samples per request: temperature / nucleus (top-p) with a
 per-request PRNG seed, applied batched over all lanes in one jitted call;
 ``temperature=0`` lanes reduce exactly to greedy argmax.
 
+Speculative decode (``speculate_k > 0``) replaces the one-token decode step
+with a draft/verify macro-step: ``k`` cheap decode forwards of a
+rank-truncated *draft* model (``models.lm.make_draft_params`` — the top
+singular directions of the existing joint low-rank factors, sharing the same
+paged latent cache) propose up to ``k`` tokens per resident, then ONE
+full-model verify forward (``models.lm.apply_verify_paged``) re-scores all
+``k+1`` window positions against the paged prefix.  Acceptance is standard
+distribution-preserving rejection sampling against the per-request
+temperature/top-p target using the same count-folded PRNG (greedy lanes
+accept on exact argmax match), so accepted streams match plain decode in
+distribution — and exactly under greedy (or with a full-rank draft), where
+the stream is also invariant under preemption.  A *truncated*-draft sampled
+stream is path-dependent by construction — which token the accept coin
+judges depends on where the macro-step windows fall, so preemption (which
+shifts window alignment) can change the realized sample while preserving
+its distribution, exactly as in standard speculative sampling.  Rejected
+tokens roll the pool chain back via ``BlockManager.truncate``; the decode
+hot path advances ``1 + accepted`` tokens per verify forward instead of 1.
+
 Admission (``admission="preempt"``, the default) holds nothing back: a
 request is admitted as soon as its next allocation fits, residents grow
 blocks on demand, and when the pool runs dry mid-flight the scheduler
@@ -151,6 +170,8 @@ class Request:
     swapped: Optional[Any] = None         # cache.SwappedSeq awaiting swap-in
     preempted_at: List[int] = dataclasses.field(default_factory=list)
     #   ^ len(generated) at each preemption (0 = preempted mid-prefill)
+    spec_proposed: int = 0                # draft tokens proposed for this req
+    spec_accepted: int = 0                # draft tokens that survived verify
     submit_wall: float = 0.0
     first_token_wall: float = 0.0
     first_token_step: int = -1
@@ -177,6 +198,10 @@ class SchedulerConfig:
     prefill_batch_lanes: int = 0          # mid-prefill lanes packed per chunked
                                           # forward (0 → max_slots; 1 → PR-3
                                           # one-request-per-chunk behaviour)
+    speculate_k: int = 0                  # draft tokens per resident per step
+                                          # (0 → plain one-token decode)
+    draft_rank: int = 0                   # joint-factor rank of the draft
+                                          # model (0 or >= d_ckv → full rank)
     admission: str = "preempt"            # "preempt" | "watermark" (legacy)
     eviction: str = "recompute"           # "recompute" | "swap" (host swap-out)
     use_kernel: bool = True               # Pallas paged kernel on TPU
@@ -209,13 +234,112 @@ def sample_tokens(logits, temps, top_ps, seeds, counts):
         sl = scaled[order]
         probs = jax.nn.softmax(sl)
         # nucleus: drop tokens whose preceding cumulative mass already covers
-        # top_p (the smallest covering set always keeps its first member)
+        # top_p; the smallest covering set always keeps its first member
+        # (even at the top_p <= 0 boundary, where the cut would otherwise
+        # mask everything and sample from garbage)
         cut = (jnp.cumsum(probs) - probs) >= top_p
+        cut = cut.at[0].set(False)
         sl = jnp.where(cut, -jnp.inf, sl)
         tok = order[jax.random.categorical(key, sl)].astype(jnp.int32)
         return jnp.where(temp <= 0.0, greedy, tok)
 
     return jax.vmap(one)(logits, temps, top_ps, seeds, counts)
+
+
+# ---------------------------------------------------------------------------
+# speculative-decode acceptance (pure functions — property-tested directly)
+# ---------------------------------------------------------------------------
+
+_ACCEPT_SALT = 0x5BEC                     # PRNG fold salts: the accept coin and
+_RESID_SALT = 0x5BED                      # residual draw for one token index
+
+
+def nucleus_probs(logits, temp: float, top_p: float) -> np.ndarray:
+    """The exact categorical distribution ``sample_tokens`` draws from, as a
+    dense probability vector (numpy, float64): temperature-scaled softmax
+    restricted to the smallest descending-probability set whose mass reaches
+    ``top_p`` (the set always keeps its first member).  Tokens outside the
+    nucleus get probability exactly 0 — the rejection-sampling target/draft
+    distributions for speculative decode."""
+    scaled = np.asarray(logits, np.float64) / max(float(temp), 1e-6)
+    order = np.argsort(-scaled, kind="stable")
+    sl = scaled[order]
+    e = np.exp(sl - sl.max())
+    probs = e / e.sum()
+    cut = (np.cumsum(probs) - probs) >= top_p
+    cut[0] = False                        # first member survives even top_p=0
+    sl = np.where(cut, -np.inf, sl)
+    e = np.exp(sl - sl[0])                # sl[0] is always kept (finite max)
+    p_sorted = e / e.sum()
+    out = np.zeros_like(p_sorted)
+    out[order] = p_sorted
+    return out
+
+
+def speculative_accept(token: int, p: np.ndarray, q: np.ndarray,
+                       u: float) -> bool:
+    """Distribution-preserving accept test for a draft ``token`` proposed
+    from draft distribution ``q`` against target ``p``: accept iff
+    ``u <= p(token)/q(token)`` (``u`` uniform on [0,1)).  Combined with
+    ``residual_sample`` on rejection, the emitted token is distributed
+    exactly as ``p`` (Leviathan et al.'s rejection-sampling identity).
+    A token outside the *target* nucleus is never accepted, even when the
+    host-side ``q`` disagrees with the device sampler's float32 nucleus cut
+    at the top-p boundary and reports ``q(token) == 0`` (which would
+    otherwise make the ratio vacuously pass)."""
+    return p[token] > 0.0 and u * q[token] <= p[token]
+
+
+def residual_sample(p: np.ndarray, q: np.ndarray, r: float) -> int:
+    """Inverse-CDF draw from the normalized residual ``max(p - q, 0)`` — the
+    corrected token after a rejection.  Support is a subset of ``p``'s
+    (never a token outside the target nucleus).  Degenerate ``p == q``
+    residuals (possible only through float rounding — exact equality always
+    accepts) fall back to ``p`` itself."""
+    res = np.maximum(np.asarray(p, np.float64) - np.asarray(q, np.float64), 0.0)
+    if res.sum() <= 1e-12:
+        res = np.asarray(p, np.float64)
+    nz = np.flatnonzero(res)
+    cdf = np.cumsum(res[nz]) / res[nz].sum()
+    return int(nz[min(np.searchsorted(cdf, r, side="right"), len(nz) - 1)])
+
+
+def _spec_uniform(seed: int, count: int, salt: int) -> float:
+    """Uniform [0,1) tied to (request seed, token index, salt) — the same
+    count-folded PRNG discipline as ``sample_tokens``, so acceptance
+    decisions replay identically across preemption/recompute."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), count), salt)
+    return float(jax.random.uniform(key))
+
+
+def _prompt_buckets(finished: List[Request], edges: Tuple[int, ...]):
+    """Partition finished requests by prompt length: yields
+    ``(label, requests)`` per bucket — the single source of the bucket edges
+    and labels every per-bucket metric (TTFT, acceptance) keys on, so the
+    ``ttft_prompt_*`` and ``acc_prompt_*`` CSV columns can never
+    desynchronize."""
+    lo = 0
+    for hi in tuple(edges) + (None,):
+        label = (f"{lo + 1}-{hi}" if hi is not None else f">{lo}")
+        yield label, [r for r in finished if lo < len(r.prompt)
+                      and (hi is None or len(r.prompt) <= hi)]
+        lo = hi if hi is not None else lo
+
+
+def acceptance_by_prompt_bucket(finished: List[Request],
+                                edges: Tuple[int, ...] = (16, 64)
+                                ) -> Dict[str, float]:
+    """Mean draft-acceptance rate per prompt-length bucket (same buckets as
+    ``ttft_by_prompt_bucket``) — long-prompt windows attend to more context,
+    so acceptance can drift with depth; the serving benchmark reports it."""
+    out: Dict[str, float] = {}
+    for label, rs in _prompt_buckets(finished, edges):
+        rs = [r for r in rs if r.spec_proposed]
+        if rs:
+            out[label] = float(sum(r.spec_accepted for r in rs)
+                               / sum(r.spec_proposed for r in rs))
+    return out
 
 
 def ttft_by_prompt_bucket(finished: List[Request],
@@ -225,14 +349,10 @@ def ttft_by_prompt_bucket(finished: List[Request],
     that would otherwise queue behind long ones.  ``edges`` split lengths into
     len(edges)+1 buckets: <=16, 17..64, >64 by default."""
     out: Dict[str, float] = {}
-    lo = 0
-    for hi in tuple(edges) + (None,):
-        label = (f"{lo + 1}-{hi}" if hi is not None else f">{lo}")
-        ttfts = [r.first_token_step - r.arrival for r in finished
-                 if lo < len(r.prompt) and (hi is None or len(r.prompt) <= hi)]
-        if ttfts:
-            out[label] = float(np.mean(ttfts))
-        lo = hi if hi is not None else lo
+    for label, rs in _prompt_buckets(finished, edges):
+        if rs:
+            out[label] = float(np.mean([r.first_token_step - r.arrival
+                                        for r in rs]))
     return out
 
 
@@ -267,10 +387,26 @@ class ServeReport:
     swapped_bytes: int = 0                # host↔device eviction traffic (out)
     mean_occupancy: float = 0.0           # mean fraction of pool blocks in use
     mean_prefill_batch: float = 0.0       # mean lanes per chunked-prefill call
+    speculate_k: int = 0                  # draft window size the run used
+    draft_rank: int = 0                   # draft joint-factor rank (0 = full)
+    draft_forwards: int = 0               # rank-truncated draft decode calls
+    draft_proposed: int = 0               # draft tokens proposed across lanes
+    draft_accepted: int = 0               # draft tokens that survived verify
+    acceptance_rate: float = 0.0          # accepted / proposed
+    mean_accepted: float = 0.0            # accepted draft tokens per window
+    tokens_per_forward: float = 0.0       # tokens per lane per decode/verify
+                                          # forward (plain ≡ 1.0; spec =
+                                          # 1 + mean_accepted)
+    acceptance_by_bucket: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
         bucket = "".join(f" ttft[{k}]={v:.1f}" for k, v in
                          self.ttft_steps_by_bucket.items())
+        spec = ""
+        if self.speculate_k:
+            spec = (f" spec[k={self.speculate_k},r={self.draft_rank}] "
+                    f"acc={self.acceptance_rate:.2f} "
+                    f"tok/fwd={self.tokens_per_forward:.2f}")
         return (f"completed={self.completed} steps={self.decode_steps} "
                 f"decoded={self.decoded_tokens} tok/s={self.tok_per_s:.1f} "
                 f"ttft_steps={self.ttft_steps_mean:.1f}{bucket} "
@@ -282,7 +418,7 @@ class ServeReport:
                 f"occ={self.mean_occupancy:.2f} [{self.admission}] "
                 f"preempt={self.preemptions}"
                 f"(swap {self.swap_outs}/{self.swap_ins}) "
-                f"prefill_batch={self.mean_prefill_batch:.1f}")
+                f"prefill_batch={self.mean_prefill_batch:.1f}{spec}")
 
 
 class Scheduler:
@@ -306,6 +442,16 @@ class Scheduler:
         self.naive_blocks = 0
         self.prefill_chunks = 0             # prefill forward calls issued
         self._prefill_lanes_total = 0       # Σ live lanes over those calls
+        self.draft_forwards = 0             # speculative: draft decode calls
+        self.draft_proposed = 0             # Σ draft tokens proposed
+        self.draft_accepted = 0             # Σ draft tokens accepted
+        self._spec_windows = 0              # (lane, step) verify windows run
+        self._lane_steps = 0                # Σ live lanes over decode forwards
+        self._decode_appended = 0           # tokens appended by decode/verify
+        # the draft shares params unless a real rank truncation is requested
+        self.draft_params = (
+            lm.make_draft_params(params, cfg, scfg.draft_rank)
+            if scfg.speculate_k > 0 else None)
 
         def _prefill(params, buffers, tokens, pages, slot_mapping):
             return lm.apply_prefill_paged(params, buffers, cfg,
@@ -333,12 +479,23 @@ class Scheduler:
                                          use_kernel=scfg.use_kernel,
                                          moe_impl=moe_impl, mesh=mesh)
 
+        def _verify(params, buffers, tokens, pages, slot_mapping,
+                    block_tables, q_offsets, lengths):
+            return lm.apply_verify_paged(params, buffers, cfg,
+                                         {"tokens": tokens}, pages,
+                                         slot_mapping, block_tables,
+                                         q_offsets, lengths,
+                                         block_size=scfg.block_size,
+                                         use_kernel=scfg.use_kernel,
+                                         moe_impl=moe_impl, mesh=mesh)
+
         # donate the pages so XLA updates the pool in place rather than
         # copying every block each step (donation is unsupported + noisy on CPU)
         donate = () if jax.default_backend() == "cpu" else (3,)
         self._prefill = jax.jit(_prefill, donate_argnums=donate)
         self._prefill_batch = jax.jit(_prefill_batch, donate_argnums=donate)
         self._decode = jax.jit(_decode, donate_argnums=donate)
+        self._verify = jax.jit(_verify, donate_argnums=donate)
         self._sample = jax.jit(sample_tokens)
 
     # -- request intake -----------------------------------------------------
@@ -454,22 +611,37 @@ class Scheduler:
                 if victim is req:
                     return False
 
+    # -- single-row sampling ------------------------------------------------
+    def _sample_one(self, req: Request, row, count: int) -> int:
+        """One token from a single logits row with ``req``'s sampling params
+        and the count-folded PRNG — exactly the draw the batched decode
+        sampler would make for token index ``count``.  The single source of
+        the per-token PRNG discipline for the prefill first-token and the
+        speculative bonus token (the golden preemption/speculation stream
+        invariants both hang off it)."""
+        if req.temperature <= 0:
+            return int(np.argmax(np.asarray(row)))
+        return int(np.asarray(self._sample(
+            jnp.asarray(row)[None],
+            jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_p], jnp.float32),
+            jnp.asarray([req.seed], jnp.int32),
+            jnp.asarray([count], jnp.int32)))[0])
+
     # -- chunked / batched prefill ------------------------------------------
     def _sample_prefill_token(self, req: Request, last_row) -> None:
         """Sample the token that follows a completed (re)prefill from its
         final logits row.  The PRNG count is ``len(generated)``: 0 for a
         fresh prompt (the request's first token), ``k`` after a recompute —
         re-drawing exactly the token the interrupted decode step would have
-        produced, so preemption never changes the stream."""
-        if req.temperature > 0:
-            tok = int(np.asarray(self._sample(
-                last_row[None],
-                jnp.asarray([req.temperature], jnp.float32),
-                jnp.asarray([req.top_p], jnp.float32),
-                jnp.asarray([req.seed], jnp.int32),
-                jnp.asarray([len(req.generated)], jnp.int32)))[0])
-        else:
-            tok = int(jnp.argmax(last_row))
+        produced, so preemption never changes the stream.  (Speculative
+        caveat: with a truncated draft at temperature > 0 the interrupted
+        token may originally have come through the accept/residual path,
+        whose outcome depends on window alignment — the redraw here keeps
+        the stream correctly *distributed* but, like any window-alignment
+        shift, can change the realized sample; greedy and full-rank-draft
+        streams are exactly invariant.)"""
+        tok = self._sample_one(req, last_row, len(req.generated))
         req.generated.append(tok)
         if req.first_token_step < 0:        # TTFT survives preemption
             req.first_token_wall = time.perf_counter()
@@ -572,17 +744,33 @@ class Scheduler:
 
     # -- one scheduler iteration -------------------------------------------
     def step(self) -> bool:
-        """Admit + chunk-prefill + decode once.  Returns False when drained."""
+        """Admit + chunk-prefill + decode (or draft/verify) once.  Returns
+        False when drained."""
         self._try_admit()
         self._prefill_work()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         self.peak_slots = max(self.peak_slots, len(occupied))
-        # decode lanes: slots whose prefill source is fully cached.  Grow
-        # each chain one token, oldest lane first — growth may preempt the
-        # youngest residents (who then sit out this step in the queue).
-        grown: Dict[int, int] = {}          # slot → position of the new token
+        # decode lanes: slots whose prefill source is fully cached, oldest
+        # first — chain growth may preempt the youngest residents (who then
+        # sit out this step in the queue).
         order = sorted((self.slots[i].arrival, self.slots[i].uid, i)
                        for i in occupied if self._decode_ready(self.slots[i]))
+        if self.scfg.speculate_k > 0:
+            progressed = self._speculative_step(order)
+        else:
+            progressed = self._decode_step(order)
+        if not progressed:
+            if all(s is None for s in self.slots) and not self.waiting:
+                return False
+            self.t += 1                     # waiting on arrivals or prefill
+            return True
+        self.t += 1
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    def _decode_step(self, order) -> bool:
+        """Plain one-token decode over every decode-ready lane (one forward).
+        Returns False when no lane was live (waiting on arrivals/prefill)."""
+        grown: Dict[int, int] = {}          # slot → position of the new token
         for _, _, i in order:
             req = self.slots[i]
             if req is None:
@@ -594,10 +782,7 @@ class Scheduler:
         self._occupancy.append(
             self.pool.allocator.num_used / self.pool.num_blocks)
         if not active:
-            if all(s is None for s in self.slots) and not self.waiting:
-                return False
-            self.t += 1                     # waiting on arrivals or prefill
-            return True
+            return False
 
         scfg = self.scfg
         B = scfg.max_slots
@@ -637,13 +822,194 @@ class Scheduler:
         else:                               # all-greedy step: skip the
             nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))  # sampler
         self._step_wall_ms.append((time.perf_counter() - t0) * 1e3)
-        self.t += 1
+        self._lane_steps += len(active)
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])
             req.generated.append(tok)
+            self._decode_appended += 1
             self._maybe_finish(i, tok)
-        return bool(self.waiting) or any(s is not None for s in self.slots)
+        return True
+
+    # -- speculative decode: draft / verify macro-step -----------------------
+    def _speculative_step(self, order) -> bool:
+        """Draft + verify for every decode-ready lane (docs/serving.md):
+
+        1. grow each lane's chain for its whole window up front (``w`` draft
+           slots + the pending token's slot, ``w = min(k, budget left)``) —
+           growth may preempt, exactly like plain decode's one-token growth;
+        2. ``k`` sequential decode forwards of the rank-truncated draft
+           propose tokens (batched over lanes; draft streams scatter into the
+           pool so later draft tokens attend to earlier ones);
+        3. ONE full-model verify forward re-scores all ``k+1`` window
+           positions per lane against the paged prefix — overwriting the
+           window's pool slots with full-model streams;
+        4. per lane, accept a prefix by rejection sampling (greedy: exact
+           argmax match) and roll the chain back over rejected tokens via
+           ``BlockManager.truncate``.
+
+        Between steps the request/pool invariant is exactly plain decode's
+        (cache = prompt + generated[:-1], last token pending), so preemption,
+        swap and recompute machinery work unchanged."""
+        scfg = self.scfg
+        k = scfg.speculate_k
+        B = scfg.max_slots
+        W = k + 1
+        windows: Dict[int, Tuple[int, int]] = {}   # slot → (cur, w)
+        for _, _, i in order:
+            req = self.slots[i]
+            if req is None:
+                continue                    # evicted by an older lane's growth
+            cur = self.pool.length(req.uid)
+            w = min(k, req.max_new_tokens - len(req.generated))
+            if self._grow_or_preempt(req, cur + w + 1):
+                windows[i] = (cur, w)
+        active = [i for i in windows if self.slots[i] is not None]
+        self._occupancy.append(
+            self.pool.allocator.num_used / self.pool.num_blocks)
+        if not active:
+            return False
+
+        t0 = time.perf_counter()
+        # block tables are invariant for the whole macro-step (every chain
+        # was grown to its full window above): build them once, reuse for
+        # all k draft forwards and the verify forward.  Lanes that fall out
+        # of a shorter window mid-draft are masked by length 0 + oob slots.
+        seq_ids_act: List[Optional[int]] = [None] * B
+        for i in active:
+            seq_ids_act[i] = self.slots[i].uid
+        bt = jnp.asarray(self.pool.block_table_array(
+            seq_ids_act, scfg.max_blocks_per_seq))
+        # -- draft: k cheap truncated-rank decode forwards, batched over lanes
+        drafts: Dict[int, List[int]] = {i: [] for i in active}
+        dlogits: Dict[int, List[np.ndarray]] = {i: [] for i in active}
+        xs = {i: self.slots[i].generated[-1] for i in active}
+        for j in range(k):
+            live = [i for i in active if windows[i][1] > j]
+            if not live:
+                break
+            tokens = np.zeros((B, 1), np.int32)
+            lengths = np.zeros((B,), np.int32)
+            temps = np.zeros((B,), np.float32)
+            top_ps = np.ones((B,), np.float32)
+            seeds = np.zeros((B,), np.int32)
+            counts = np.zeros((B,), np.int32)
+            seq_ids: List[Optional[int]] = [None] * B
+            positions = [0] * B
+            for i in live:
+                req = self.slots[i]
+                cur, _ = windows[i]
+                tokens[i, 0] = xs[i]
+                lengths[i] = cur + j + 1
+                seq_ids[i] = req.uid
+                positions[i] = cur + j
+                temps[i] = req.temperature
+                top_ps[i] = req.top_p
+                seeds[i] = req.seed
+                counts[i] = len(req.generated) + j  # index of the proposal
+            sm = self.pool.slot_mapping(seq_ids, positions)
+            logits, self.pool.pages = self._decode(
+                self.draft_params, self.buffers, jnp.asarray(tokens),
+                self.pool.pages, jnp.asarray(sm), bt,
+                jnp.asarray(lengths))
+            self.draft_forwards += 1
+            sampled = bool(np.any(temps > 0))
+            if sampled:
+                nxt = np.asarray(self._sample(
+                    logits[:, -1, :], jnp.asarray(temps), jnp.asarray(top_ps),
+                    jnp.asarray(seeds), jnp.asarray(counts)))
+                # draft distributions are only needed for the accept ratio —
+                # all-greedy macro-steps skip the host transfer entirely
+                rows = np.asarray(logits[:, -1, :])
+            else:
+                nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+                rows = None
+            for i in live:
+                drafts[i].append(int(nxt[i]))
+                if rows is not None:
+                    dlogits[i].append(rows[i])
+                xs[i] = int(nxt[i])
+
+        # -- verify: all k+1 window positions per lane in ONE forward --------
+        tokens = np.zeros((B, W), np.int32)
+        sms = np.full((B, W), self.pool.oob_slot, np.int32)
+        offs = np.zeros((B,), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        for i in active:
+            req = self.slots[i]
+            cur, w = windows[i]
+            tokens[i, 0] = req.generated[-1]
+            tokens[i, 1:1 + w] = drafts[i][:w]
+            sms[i] = self.pool.prefill_slot_mapping(req.uid, cur, w + 1, W)
+            offs[i] = cur
+            lengths[i] = cur + w + 1
+        logits, self.pool.pages = self._verify(
+            self.params, self.buffers, jnp.asarray(tokens), self.pool.pages,
+            jnp.asarray(sms), bt, jnp.asarray(offs),
+            jnp.asarray(lengths))
+        rows_all = np.asarray(logits)
+        self._step_wall_ms.append((time.perf_counter() - t0) * 1e3)
+        self._lane_steps += len(active)
+
+        # -- accept a prefix per lane, roll the chain back over the rest -----
+        for i in active:
+            req = self.slots[i]
+            cur, w = windows[i]
+            out = self._accept_window(req, drafts[i][:w], dlogits[i][:w],
+                                      rows_all[i])
+            n_acc = len(out) - 1
+            self.bm.truncate(req.uid, cur + n_acc + 1)
+            appended = 0
+            for tok in out:
+                req.generated.append(tok)
+                appended += 1
+                self._maybe_finish(i, tok)
+                if self.slots[i] is None:
+                    break                   # EOS/budget mid-window: rest drops
+            self._decode_appended += appended
+            # count only accepted drafts that were actually *kept* — an EOS
+            # cutting an accepted prefix short must not inflate acceptance
+            # (keeps tokens_per_forward == 1 + mean_accepted away from EOS)
+            kept = min(n_acc, appended)
+            req.spec_proposed += w
+            req.spec_accepted += kept
+            self.draft_proposed += w
+            self.draft_accepted += kept
+            self._spec_windows += 1
+        return True
+
+    def _accept_window(self, req: Request, drafts: List[int],
+                       dlogits: List[np.ndarray], rows: np.ndarray
+                       ) -> List[int]:
+        """Decide one lane's verify window.  Returns the tokens to append:
+        the accepted draft prefix plus exactly one more — the corrected token
+        on the first rejection, or the bonus token when every draft survived.
+        ``rows[j]`` is the full model's logits after window token ``j``
+        (j = 0 is the pending token), the distribution plain decode would
+        have sampled token ``len(generated) + j`` from."""
+        out: List[int] = []
+        for j, x in enumerate(drafts):
+            t_idx = len(req.generated) + j  # generated index of the candidate
+            if req.temperature <= 0:
+                tgt = int(np.argmax(rows[j]))
+                if x != tgt:
+                    out.append(tgt)         # greedy correction == plain token
+                    return out
+                out.append(x)
+                continue
+            p = nucleus_probs(rows[j], req.temperature, req.top_p)
+            q = nucleus_probs(dlogits[j], req.temperature, req.top_p)
+            if not speculative_accept(
+                    x, p, q, _spec_uniform(req.seed, t_idx, _ACCEPT_SALT)):
+                out.append(residual_sample(
+                    p, q, _spec_uniform(req.seed, t_idx, _RESID_SALT)))
+                return out
+            out.append(x)
+        # every draft accepted → bonus token from the final verify row, drawn
+        # exactly as plain decode would (same count-folded PRNG)
+        j = len(drafts)
+        out.append(self._sample_one(req, rows[j], len(req.generated) + j))
+        return out
 
     # -- drive to completion ------------------------------------------------
     def run(self, requests: Optional[List[Request]] = None,
@@ -688,7 +1054,17 @@ class Scheduler:
             mean_occupancy=(float(np.mean(self._occupancy))
                             if self._occupancy else 0.0),
             mean_prefill_batch=(self._prefill_lanes_total
-                                / max(self.prefill_chunks, 1)))
+                                / max(self.prefill_chunks, 1)),
+            speculate_k=self.scfg.speculate_k,
+            draft_rank=self.scfg.draft_rank,
+            draft_forwards=self.draft_forwards,
+            draft_proposed=self.draft_proposed,
+            draft_accepted=self.draft_accepted,
+            acceptance_rate=self.draft_accepted / max(self.draft_proposed, 1),
+            mean_accepted=self.draft_accepted / max(self._spec_windows, 1),
+            tokens_per_forward=(self._decode_appended
+                                / max(self._lane_steps, 1)),
+            acceptance_by_bucket=acceptance_by_prompt_bucket(fin))
 
 
 def generate_paged(params, buffers, cfg: ModelConfig, prompts: jnp.ndarray,

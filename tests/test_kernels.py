@@ -140,6 +140,136 @@ def test_flash_prefill_per_lane_vectors(offs, lens, bq, bk):
         assert float(jnp.max(jnp.abs(o_k[-1]))) == 0.0
 
 
+def _verify_inputs(B, W, nkv, G, r2, dc, n_blocks, bs, seed=4):
+    """Random paged pool + window queries for the verify kernel tests."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    nh = nkv * G
+    q_e = jax.random.normal(ks[0], (B, W, nh, r2))
+    q_lat = jax.random.normal(ks[1], (B, W, nh, dc))
+    k_e_p = jax.random.normal(ks[2], (n_blocks * bs, nkv, r2))
+    c_p = jax.random.normal(ks[3], (n_blocks * bs, dc))
+    # disjoint block chains in scrambled physical order
+    perm = np.random.default_rng(seed).permutation(n_blocks)
+    mb = n_blocks // B
+    bt = jnp.asarray(perm[:B * mb].reshape(B, mb), jnp.int32)
+    return q_e, q_lat, k_e_p, c_p, bt
+
+
+@pytest.mark.parametrize("W,offs,lens,bs", [
+    (3, [10, 0], [13, 3], 8),      # windows crossing block boundaries
+    (5, [6, 30], [11, 35], 8),     # off + W spans 2–3 blocks, uneven lanes
+    (2, [0, 0], [2, 0], 4),        # fresh lane + a dead kv_len==0 lane
+])
+def test_elite_verify_paged_kernel_vs_oracle(W, offs, lens, bs):
+    """The k+1-token verify window vs the paged oracle: the Pallas block-
+    table walk must reproduce the gather-based reference for windows that
+    cross block boundaries, start at position 0 (fresh lane), or are dead
+    (kv_len == 0 → exact zeros)."""
+    B, nkv, G, r2, dc = 2, 2, 2, 4, 16
+    q_e, q_lat, k_e_p, c_p, bt = _verify_inputs(B, W, nkv, G, r2, dc,
+                                                n_blocks=16, bs=bs)
+    offs_a = jnp.asarray(offs, jnp.int32)
+    lens_a = jnp.asarray(lens, jnp.int32)
+    o_r = ref.elite_verify_paged_ref(q_e, q_lat, k_e_p, c_p, c_p, bt, offs_a,
+                                     lens_a, G, 0.2, bs)
+    o_k = ed.elite_verify_paged(q_e, q_lat, k_e_p, c_p, c_p, bt, offs_a,
+                                lens_a, G, 0.2, bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=3e-5, rtol=3e-5)
+    for b in range(B):
+        if lens[b] == 0:               # dead lane: exact zeros, no uniform-p
+            assert float(jnp.max(jnp.abs(o_k[b]))) == 0.0
+            assert float(jnp.max(jnp.abs(o_r[b]))) == 0.0
+
+
+def test_elite_verify_window_matches_flash_mask():
+    """Cross-oracle check: the verify window's offset-causal mask is exactly
+    ``flash_prefill``'s resumed-chunk diagonal — scoring the same window in
+    materialized K/V space (keys = [k_e | c·I], values = c) must agree."""
+    B, nkv, G, r2, dc, W = 2, 2, 2, 4, 16, 3
+    S = 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    nh = nkv * G
+    q_e = jax.random.normal(ks[0], (B, W, nh, r2))
+    q_lat = jax.random.normal(ks[1], (B, W, nh, dc))
+    k_e = jax.random.normal(ks[2], (B, S, nkv, r2))
+    c = jax.random.normal(ks[3], (B, S, dc))
+    offs = jnp.asarray([10, 4], jnp.int32)
+    lens = jnp.asarray([13, 7], jnp.int32)
+    o_v = ref.elite_verify_ref(q_e, q_lat, k_e, c, c, offs, lens, G, 0.2)
+    # materialized equivalent: q = [q_e | q_lat] per query head against
+    # k = [k_e(kv head) | c] (latent shared across heads); the value carries
+    # the latent in its last dc dims (flash keeps one head width throughout)
+    q_full = jnp.concatenate([q_e, q_lat], axis=-1)          # [B,W,nh,r2+dc]
+    c_h = jnp.broadcast_to(c[:, :, None], (B, S, nkv, dc))
+    k_full = jnp.concatenate([k_e, c_h], axis=-1)
+    v_full = jnp.concatenate([jnp.zeros((B, S, nkv, r2)), c_h], axis=-1)
+    o_f = ref.flash_prefill_ref(q_full, k_full, v_full, G, 0.2,
+                                q_offset=offs, kv_lens=lens)
+    np.testing.assert_allclose(np.asarray(o_v), np.asarray(o_f[..., r2:]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_elite_verify_mixed_decode_lanes():
+    """Mixed verify/decode lanes in ONE batched call: a plain decode lane is
+    the degenerate window whose row 0 sits at position length-1 (rows past
+    the live length produce defined-but-ignored values); its row 0 must
+    equal the single-query paged decode oracle while a full verify lane
+    rides alongside."""
+    B, nkv, G, r2, dc, W, bs = 2, 2, 2, 4, 16, 3, 8
+    q_e, q_lat, k_e_p, c_p, bt = _verify_inputs(B, W, nkv, G, r2, dc,
+                                                n_blocks=16, bs=bs, seed=9)
+    dec_len = 14                        # lane 0: plain decode of token 14
+    offs = jnp.asarray([dec_len - 1, 5], jnp.int32)    # lane 1: verify window
+    lens = jnp.asarray([dec_len, 5 + W], jnp.int32)
+    o_v = ed.elite_verify_paged(q_e, q_lat, k_e_p, c_p, c_p, bt, offs, lens,
+                                G, 0.2, bs, interpret=True)
+    o_r = ref.elite_verify_paged_ref(q_e, q_lat, k_e_p, c_p, c_p, bt, offs,
+                                     lens, G, 0.2, bs)
+    np.testing.assert_allclose(np.asarray(o_v), np.asarray(o_r),
+                               atol=3e-5, rtol=3e-5)
+    # decode lane row 0 == the single-query decode kernel's answer
+    o_d = ref.elite_decode_paged_ref(q_e[:, 0], q_lat[:, 0], k_e_p, c_p, c_p,
+                                     bt, jnp.asarray([dec_len, 0], jnp.int32),
+                                     G, 0.2, bs)
+    np.testing.assert_allclose(np.asarray(o_v[0, 0]), np.asarray(o_d[0]),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_verify_kernel_matches_model_attention(tiny_elite_cfg, tiny_elite_model):
+    """End-to-end: lm.apply_verify_paged's logits row for a 1-token window
+    equal lm.apply_decode_paged's for the same state (the W=1 degenerate
+    case the scheduler relies on for mixed accounting)."""
+    from repro.core.cache import PagedKVPool
+    from repro.models import lm
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    sp, bsz, mb = 9, 4, 8
+    pool = PagedKVPool(cfg, num_blocks=16, block_size=bsz)
+    pool.ensure_capacity(0, sp)
+    prompt = (np.arange(sp) * 3 % cfg.vocab_size).astype(np.int32)
+    toks = np.zeros((1, 12), np.int32)
+    toks[0, :sp] = prompt
+    sm = pool.prefill_slot_mapping(0, 0, sp, 12)[None]
+    _, pool.pages = lm.apply_prefill_paged(
+        params, buffers, cfg, {"tokens": jnp.asarray(toks)}, pool.pages,
+        jnp.asarray(sm))
+    pool.ensure_capacity(0, sp + 1)
+    bt = jnp.asarray(pool.block_table_array([0], mb))
+    nxt = np.asarray([[17]], np.int32)
+    sm1 = jnp.asarray(pool.slot_mapping([0], [sp]))
+    dec_logits, _ = lm.apply_decode_paged(
+        params, buffers, cfg, {"tokens": jnp.asarray(nxt)}, pool.pages, sm1,
+        bt, jnp.asarray([sp + 1], jnp.int32), block_size=bsz)
+    ver_logits, _ = lm.apply_verify_paged(
+        params, buffers, cfg, {"tokens": jnp.asarray(nxt)}, pool.pages,
+        sm1[:, None], bt, jnp.asarray([sp], jnp.int32),
+        jnp.asarray([sp + 1], jnp.int32), block_size=bsz)
+    np.testing.assert_allclose(np.asarray(ver_logits[0, 0]),
+                               np.asarray(dec_logits[0, 0]),
+                               atol=2e-4, rtol=2e-4)
+
+
 @pytest.mark.parametrize("S,H,r,bs", [(64, 4, 4, 16), (32, 2, 8, 32), (128, 1, 2, 64)])
 def test_rope_elite_sweep(S, H, r, bs):
     key = jax.random.PRNGKey(2)

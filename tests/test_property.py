@@ -111,20 +111,82 @@ def test_ssm_scan_chunk_invariance(chunk, seed):
     np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4, rtol=1e-4)
 
 
+@given(seed=st.integers(0, 200), V=st.sampled_from([3, 4, 6]),
+       temp=st.floats(0.3, 2.0), top_p=st.floats(0.3, 1.0))
+@settings(max_examples=8, deadline=None)
+def test_rejection_sampling_preserves_target_distribution(seed, V, temp, top_p):
+    """The speculative accept-or-resample rule is distribution-preserving:
+    for arbitrary target/draft logits, the emitted token (accepted draft, or
+    the residual-corrected token on rejection) is distributed exactly as the
+    target nucleus distribution — and never lands outside its nucleus."""
+    from repro.runtime.serve_loop import (nucleus_probs, residual_sample,
+                                          speculative_accept)
+    rng = np.random.default_rng(seed)
+    tgt_logits = rng.normal(size=V) * 2.0
+    drf_logits = rng.normal(size=V) * 2.0
+    p = nucleus_probs(tgt_logits, temp, top_p)
+    q = nucleus_probs(drf_logits, temp, top_p)
+    np.testing.assert_allclose(p.sum(), 1.0, atol=1e-9)
+    assert p.min() >= 0.0 and (p > 0).any()
+
+    N = 4000
+    # vectorized trial loop: draft proposals ~ q, then accept/correct
+    xs = rng.choice(V, size=N, p=q / q.sum())
+    us = rng.random(N)
+    rs = rng.random(N)
+    out = np.array([x if speculative_accept(x, p, q, u)
+                    else residual_sample(p, q, r)
+                    for x, u, r in zip(xs, us, rs)])
+    # never outside the target nucleus
+    assert np.all(p[out] > 0.0)
+    emp = np.bincount(out, minlength=V) / N
+    # total-variation bound generous for N=4000, V<=6 (≈ 4.5 sigma)
+    assert 0.5 * np.abs(emp - p).sum() < 0.06
+
+
+@given(seed=st.integers(0, 500), temp=st.floats(0.2, 3.0),
+       top_p=st.floats(0.1, 1.0))
+@settings(max_examples=15, deadline=None)
+def test_nucleus_probs_matches_sampler_support(seed, temp, top_p):
+    """``nucleus_probs`` is the exact distribution ``sample_tokens`` draws
+    from: its support equals the sampler's reachable set and a full-nucleus
+    draw agrees with the softmax."""
+    from repro.runtime import serve_loop
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=8) * 3.0
+    p = serve_loop.nucleus_probs(logits, temp, top_p)
+    # sampler draws many tokens; all must be inside the nucleus support
+    draws = np.asarray(jax.vmap(
+        lambda c: serve_loop.sample_tokens(
+            jnp.asarray(logits)[None],
+            jnp.asarray([temp], jnp.float32),
+            jnp.asarray([top_p], jnp.float32),
+            jnp.asarray([seed], jnp.int32),
+            jnp.asarray([c], jnp.int32))[0])(jnp.arange(64)))
+    assert np.all(p[draws] > 0.0)
+    if top_p >= 1.0:                       # full nucleus: plain softmax
+        sc = logits / max(temp, 1e-6)
+        sm = np.exp(sc - sc.max()) / np.exp(sc - sc.max()).sum()
+        np.testing.assert_allclose(p, sm, atol=1e-9)
+
+
 _BM_OPS = st.lists(
-    st.tuples(st.sampled_from(["grow", "free", "swap_out", "swap_in"]),
+    st.tuples(st.sampled_from(["grow", "free", "swap_out", "swap_in",
+                               "truncate"]),
               st.integers(0, 3),            # seq id
-              st.integers(1, 40)),          # target token count (grow)
+              st.integers(1, 40)),          # target token count (grow/trunc)
     min_size=1, max_size=40)
 
 
 @given(ops=_BM_OPS, num_blocks=st.integers(2, 8))
 @settings(max_examples=25, deadline=None)
 def test_block_manager_never_leaks_or_double_frees(ops, num_blocks):
-    """Arbitrary alloc/free/preempt(swap) interleavings on a tiny pool keep
-    the allocator exactly conserved: free + owned == capacity, chains stay
-    disjoint, no block is ever double-freed or leaked — even when operations
-    bounce off ``OutOfBlocks``."""
+    """Arbitrary alloc/free/preempt(swap)/truncate interleavings on a tiny
+    pool keep the allocator exactly conserved: free + owned == capacity,
+    chains stay disjoint, no block is ever double-freed or leaked — even
+    when operations bounce off ``OutOfBlocks``.  ``truncate`` is the
+    speculative verify-window rollback: it must return exactly the tail
+    blocks the shorter chain no longer covers."""
     import dataclasses as dc
     from repro.configs import get_config
     from repro.configs.base import EliteKVConfig
@@ -156,6 +218,8 @@ def test_block_manager_never_leaks_or_double_frees(ops, num_blocks):
                     swapped[sid] = s
             elif op == "swap_in" and sid in swapped and not pool.block_table(sid):
                 bm.swap_in(sid, swapped.pop(sid))
+            elif op == "truncate":
+                bm.truncate(sid, min(tokens, pool.length(sid)))
         except OutOfBlocks:
             pass                            # valid outcome; state must stay sane
         check()

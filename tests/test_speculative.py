@@ -1,0 +1,218 @@
+"""Self-speculative decode over the compressed latent cache: the golden wall.
+
+Golden tier: draft/verify macro-steps must be *invisible in the token
+stream* — greedy speculative output is identical to plain paged decode for
+every window size and draft rank (acceptance only changes how many forwards
+it takes), including under tiny-pool preemption mid-verify; and with the
+full-rank draft, seeded temperature/top-p streams match plain decode exactly
+because every proposal is accepted (the draft IS the target).  Mechanism
+tier: pool-chain rollback conservation, acceptance accounting, and the
+benchmark workload's seeding regression.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import PagedKVPool
+from repro.models import lm
+from repro.runtime import serve_loop
+
+
+def _workload(cfg, n_req=4, seed=3, temp=0.0, max_new=10):
+    rng = np.random.default_rng(seed)
+    return [serve_loop.Request(
+        uid=i,
+        prompt=rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(8, 18))).astype(np.int32),
+        max_new_tokens=max_new, arrival=i * 0.5,
+        temperature=temp, top_p=0.9, seed=11 + i) for i in range(n_req)]
+
+
+def _run(params, buffers, cfg, *, num_blocks=64, spec_k=0, rank=0, temp=0.0,
+         chunk=4, eviction="recompute", max_slots=2, eos_id=None):
+    scfg = serve_loop.SchedulerConfig(
+        max_slots=max_slots, block_size=4, num_blocks=num_blocks, max_len=48,
+        prefill_bucket=4, prefill_chunk_tokens=chunk, eviction=eviction,
+        eos_id=eos_id, speculate_k=spec_k, draft_rank=rank)
+    sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+    report = sched.run(_workload(cfg, temp=temp))
+    return {r.uid: list(r.generated) for r in sched.finished}, report, sched
+
+
+# ---------------------------------------------------------------------------
+# golden invariant: speculative greedy == plain greedy, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_k", [1, 2, 4])
+@pytest.mark.parametrize("rank", [0, 16])     # full-rank and truncated drafts
+def test_greedy_speculative_matches_plain(tiny_elite_cfg, tiny_elite_model,
+                                          spec_k, rank, stress_blocks):
+    """Any window size × any draft rank: greedy streams are bit-identical to
+    plain paged decode — rejected drafts roll the pool back, accepted ones
+    are exactly the argmax the plain path would have emitted."""
+    params, buffers = tiny_elite_model
+    nb = stress_blocks(64)
+    base, base_rep, _ = _run(params, buffers, tiny_elite_cfg, num_blocks=nb)
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg, num_blocks=nb,
+                           spec_k=spec_k, rank=rank)
+    assert out == base
+    assert rep.completed == base_rep.completed == 4
+    assert rep.speculate_k == spec_k and rep.draft_rank == rank
+    # the macro-step really advanced multiple tokens per verify forward for
+    # the full-rank draft (acceptance 1); truncated drafts may accept little
+    # on a random-init model but must still never corrupt the stream
+    if rank == 0:
+        assert rep.acceptance_rate == 1.0
+        assert rep.decode_steps < base_rep.decode_steps
+        assert rep.tokens_per_forward > 1.3
+    # every block returned after the rollback churn
+    assert sched.pool.allocator.num_free == sched.pool.num_blocks
+
+
+@pytest.mark.parametrize("eviction", ["recompute", "swap"])
+def test_speculative_survives_preemption(tiny_elite_cfg, tiny_elite_model,
+                                         eviction, stress_blocks):
+    """Tiny pool → verify-window growth forces preemptions mid-flight (the
+    window allocates k+1 slots at once, so pressure is *worse* than plain
+    decode); evicted lanes recompute/swap their prefix and the streams still
+    match plain decode on an ample pool."""
+    params, buffers = tiny_elite_model
+    base, _, _ = _run(params, buffers, tiny_elite_cfg, num_blocks=64)
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg,
+                           num_blocks=stress_blocks(9), spec_k=2, rank=16,
+                           eviction=eviction)
+    assert out == base
+    assert rep.preemptions > 0            # the tiny pool really forced them
+    if eviction == "swap":
+        assert rep.swap_outs > 0 and rep.swap_ins == rep.swap_outs
+    assert sched.pool.allocator.num_free == sched.pool.num_blocks
+
+
+def test_full_rank_sampled_matches_plain(tiny_elite_cfg, tiny_elite_model):
+    """Draft == target ⇒ rejection sampling accepts everything and the
+    seeded temperature/top-p stream equals plain decode: proposals use the
+    same count-folded PRNG the plain sampler would, and the bonus token is
+    drawn from the verify logits with the same fold."""
+    params, buffers = tiny_elite_model
+    base, _, _ = _run(params, buffers, tiny_elite_cfg, temp=0.8)
+    out, rep, _ = _run(params, buffers, tiny_elite_cfg, spec_k=2, rank=0,
+                       temp=0.8)
+    assert out == base
+    assert rep.acceptance_rate == 1.0
+    assert rep.draft_proposed > 0
+
+
+def test_truncated_sampled_is_well_formed(tiny_elite_cfg, tiny_elite_model):
+    """Truncated-draft sampled decode: the *path* may diverge from plain
+    (rejection sampling preserves the distribution, not the sample path) but
+    every request must complete with a full budget-or-EOS stream and the
+    accounting must be conserved."""
+    params, buffers = tiny_elite_model
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg, spec_k=3, rank=16,
+                           temp=0.9)
+    assert rep.completed == 4
+    assert all(len(t) == 10 for t in out.values())     # budget streams
+    assert 0 <= rep.draft_accepted <= rep.draft_proposed
+    assert 1.0 <= rep.tokens_per_forward <= 4.0        # ∈ [1, k+1]
+    assert sched.pool.allocator.num_free == sched.pool.num_blocks
+
+
+def test_speculative_with_eos_mid_window(tiny_elite_cfg, tiny_elite_model):
+    """A token id declared EOS can land inside an accepted window; the
+    stream must cut exactly where plain decode's would."""
+    params, buffers = tiny_elite_model
+    # pick the EOS id from the plain run so it actually triggers mid-stream
+    base, _, _ = _run(params, buffers, tiny_elite_cfg)
+    eos = next(iter(base.values()))[4]    # 5th token of request 0's stream
+    base_eos, base_rep, _ = _run(params, buffers, tiny_elite_cfg, eos_id=eos)
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg, spec_k=4, rank=0,
+                           eos_id=eos)
+    assert out == base_eos
+    assert any(r.finish_reason == "eos" for r in sched.finished)
+    assert sched.pool.allocator.num_free == sched.pool.num_blocks
+
+
+def test_speculative_oneshot_prefill_mode(tiny_elite_cfg, tiny_elite_model,
+                                          stress_blocks):
+    """chunk=0 (whole-prompt admission prefill) composes with speculative
+    decode — the draft/verify path only ever sees decode-ready lanes."""
+    params, buffers = tiny_elite_model
+    nb = stress_blocks(64)
+    base, _, _ = _run(params, buffers, tiny_elite_cfg, num_blocks=nb, chunk=0)
+    out, _, _ = _run(params, buffers, tiny_elite_cfg, num_blocks=nb, chunk=0,
+                     spec_k=2, rank=16)
+    assert out == base
+
+
+# ---------------------------------------------------------------------------
+# mechanism: rollback conservation + draft weights
+# ---------------------------------------------------------------------------
+
+def test_pool_truncate_frees_tail_blocks(tiny_elite_cfg):
+    pool = PagedKVPool(tiny_elite_cfg, num_blocks=8, block_size=4)
+    pool.ensure_capacity(0, 15)           # 4 blocks
+    assert pool.allocator.num_used == 4
+    chain = pool.block_table(0)
+    pool.truncate(0, 9)                   # 3 blocks keep the 9 tokens
+    assert pool.length(0) == 9
+    assert pool.allocator.num_used == 3
+    assert pool.block_table(0) == chain[:3]
+    pool.truncate(0, 9)                   # idempotent at the same length
+    assert pool.allocator.num_used == 3
+    pool.truncate(0, 0)                   # empty chain stays registered
+    assert pool.allocator.num_used == 0 and pool.length(0) == 0
+    with pytest.raises(AssertionError):
+        pool.truncate(0, 5)               # growth is not truncate's job
+
+
+def test_make_draft_params_identity_and_truncation(tiny_elite_cfg,
+                                                   tiny_elite_model):
+    params, _ = tiny_elite_model
+    cfg = tiny_elite_cfg
+    # full-rank requests return the SAME object (no copy, shared jit cache)
+    assert lm.make_draft_params(params, cfg, 0) is params
+    assert lm.make_draft_params(params, cfg, cfg.elitekv.d_ckv) is params
+    rank = 8
+    draft = lm.make_draft_params(params, cfg, rank)
+    bk = np.asarray(params["blocks"]["p0"]["attn"]["bk"])
+    bk_d = np.asarray(draft["blocks"]["p0"]["attn"]["bk"])
+    assert bk_d.shape == bk.shape
+    assert not np.allclose(bk_d, bk)      # truncation really changed them
+    # rank bound: every layer's stacked [bk | bv] factor has rank <= rank
+    bv_d = np.asarray(draft["blocks"]["p0"]["attn"]["bv"])
+    for s in range(bk_d.shape[0]):
+        M = np.concatenate([bk_d[s].reshape(bk_d.shape[1], -1),
+                            bv_d[s].reshape(bv_d.shape[1], -1)], axis=1)
+        assert np.linalg.matrix_rank(M, tol=1e-4) <= rank
+    # everything else is untouched (shared latent write path)
+    np.testing.assert_array_equal(
+        np.asarray(draft["blocks"]["p0"]["attn"]["a_kv"]),
+        np.asarray(params["blocks"]["p0"]["attn"]["a_kv"]))
+    np.testing.assert_array_equal(np.asarray(draft["embed"]["table"]),
+                                  np.asarray(params["embed"]["table"]))
+
+
+# ---------------------------------------------------------------------------
+# benchmark workload seeding regression
+# ---------------------------------------------------------------------------
+
+def test_serving_workload_is_deterministic():
+    """Two benchmark invocations must build the identical request set —
+    prompts, arrivals, budgets AND per-request sample seeds — so the
+    speculative-vs-plain comparison rows are token-comparable."""
+    from benchmarks.run import serving_workload
+    a = serving_workload(2.0)
+    b = serving_workload(2.0)
+    assert len(a) == len(b) == 12
+    for ra, rb in zip(a, b):
+        assert ra.uid == rb.uid
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+        assert ra.arrival == rb.arrival
+        assert ra.max_new_tokens == rb.max_new_tokens
+        assert (ra.temperature, ra.top_p, ra.seed) == \
+            (rb.temperature, rb.top_p, rb.seed)
+    # seeds are pinned per request (not left at the shared default)
+    assert len({r.seed for r in a}) == len(a)
