@@ -1,6 +1,7 @@
 """Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
 
     PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16] [--md out.md]
+                                                 [--json out.json]
 
 Per (arch × shape) cell, from experiments/dryrun/<mesh>/*.json:
 
@@ -75,6 +76,10 @@ def main():
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--md", default="")
+    ap.add_argument("--json", default="",
+                    help="also write the analyzed rows as structured JSON "
+                         "(same schema-versioned envelope as "
+                         "BENCH_serving.json)")
     args = ap.parse_args()
 
     rows, skips = [], []
@@ -115,6 +120,13 @@ def main():
           [(r["arch"], r["shape"]) for r in collbound])
     if args.md:
         Path(args.md).write_text(out + "\n")
+    if args.json:
+        Path(args.json).write_text(json.dumps(
+            {"benchmark": "roofline", "schema_version": 1, "mesh": args.mesh,
+             "rows": rows,
+             "skipped": [{"arch": a, "shape": s, "reason": why}
+                         for a, s, why in skips]}, indent=2) + "\n")
+        print(f"wrote {args.json} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -9,12 +9,19 @@ at miniature scale with held-out synthetic perplexity as the metric, and the
 orderings the paper reports are asserted in the derived column.
 
 Output rows: ``name,us_per_call,derived``.
+
+``serving`` additionally writes ``BENCH_serving.json`` at the repo root —
+one structured row per scenario (throughput, TTFT percentiles, occupancy,
+acceptance, phase breakdown) for machine consumption; docs/observability.md
+documents the schema.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import sys
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -282,6 +289,51 @@ def serving_workload(rate: float, vocab_size: int = 128, n: int = 12,
     return reqs
 
 
+#: Structured serving rows accumulated by ``serving()`` and written to
+#: ``BENCH_serving.json`` at the repo root (schema in docs/observability.md).
+SERVING_SCHEMA_VERSION = 1
+
+
+def _serving_row(scenario: str, rep, us: float, **extra):
+    """One machine-readable scenario row from a ``ServeReport``."""
+    row = dict(
+        scenario=scenario,
+        us_per_step=round(us, 1),
+        tok_s=round(rep.tok_per_s, 2),
+        ttft_ms_p50=round(rep.ttft_wall_p50_ms, 2),
+        ttft_ms_p95=round(rep.ttft_wall_p95_ms, 2),
+        step_ms_p50=round(rep.step_ms_p50, 2),
+        step_ms_p95=round(rep.step_ms_p95, 2),
+        occupancy=round(rep.mean_occupancy, 4),
+        completed=rep.completed,
+        decode_steps=rep.decode_steps,
+        decoded_tokens=rep.decoded_tokens,
+        prefill_chunks=rep.prefill_chunks,
+        preemptions=rep.preemptions,
+        swap_outs=rep.swap_outs,
+        blocks_high_water=rep.pool_high_water_blocks,
+        blocks_naive=rep.naive_blocks,
+        block_reuse=round(rep.block_reuse_ratio, 3),
+        acceptance=round(rep.acceptance_rate, 4),
+        tokens_per_forward=round(rep.tokens_per_forward, 3),
+        phase_ms={k: round(v, 2) for k, v in rep.phase_ms.items()},
+        step_wall_ms_total=round(rep.step_wall_ms_total, 2),
+    )
+    row.update(extra)
+    return row
+
+
+def write_serving_json(rows, path=None) -> Path:
+    """Write the ``BENCH_serving.json`` artifact (repo root by default)."""
+    path = Path(path) if path else Path(__file__).resolve().parent.parent \
+        / "BENCH_serving.json"
+    path.write_text(json.dumps(
+        {"benchmark": "serving", "schema_version": SERVING_SCHEMA_VERSION,
+         "generated_by": "PYTHONPATH=src python -m benchmarks.run serving",
+         "rows": rows}, indent=2) + "\n", encoding="utf-8")
+    return path
+
+
 def serving():
     from repro.runtime import serve_loop
 
@@ -289,6 +341,7 @@ def serving():
     cfg = dataclasses.replace(
         cfg, elitekv=EliteKVConfig(enabled=True, elite_r=4, d_ckv=64))
     params, buffers = lm.init(jax.random.PRNGKey(0), cfg)
+    json_rows = []
 
     def run_one(rate, chunk, num_blocks=96, admission="preempt",
                 eviction="recompute", lanes=0, speculate=0, draft_rank=0):
@@ -312,6 +365,9 @@ def serving():
                 plain_baseline = (sched, rep, us)
             buckets = ";".join(f"ttft_prompt_{k}={v:.1f}"
                                for k, v in rep.ttft_steps_by_bucket.items())
+            json_rows.append(_serving_row(
+                f"poisson_{tag}_chunk{chunk}", rep, us,
+                rate=rate, prefill_chunk=chunk))
             emit(f"serving/poisson_{tag}_chunk{chunk}", us,
                  f"tok_s={rep.tok_per_s:.1f};ttft_steps={rep.ttft_steps_mean:.1f};"
                  f"{buckets};prefill_chunks={rep.prefill_chunks};"
@@ -339,6 +395,11 @@ def serving():
                                  admission=admission, eviction=eviction)
         results[(admission, eviction)] = {
             r.uid: list(r.generated) for r in sched.finished}
+        json_rows.append(_serving_row(
+            f"pool{small}_{admission}_{eviction}", rep, us,
+            admission=admission, eviction=eviction, num_blocks=small,
+            tokens_match_watermark=(results[(admission, eviction)]
+                                    == results[("watermark", "recompute")])))
         emit(f"serving/pool{small}_{admission}_{eviction}", us,
              f"completed={rep.completed};occupancy={rep.mean_occupancy:.2f};"
              f"peak_slots={rep.peak_slots};preemptions={rep.preemptions};"
@@ -357,6 +418,8 @@ def serving():
     # paper's premise).  Greedy streams must be token-identical to plain.
     plain_sched, plain_rep, plain_us = plain_baseline   # bursty/chunk8 run
     plain_toks = {r.uid: list(r.generated) for r in plain_sched.finished}
+    json_rows.append(_serving_row("spec_plain", plain_rep, plain_us,
+                                  speculate_k=0))
     emit("serving/spec_plain", plain_us,
          f"tok_per_forward={plain_rep.tokens_per_forward:.2f};"
          f"decode_steps={plain_rep.decode_steps};"
@@ -366,6 +429,10 @@ def serving():
         toks = {r.uid: list(r.generated) for r in sched.finished}
         buckets = ";".join(f"acc_prompt_{b}={v:.2f}"
                            for b, v in rep.acceptance_by_bucket.items())
+        json_rows.append(_serving_row(
+            f"spec_k{spec_k}_rank{rank or 'full'}", rep, us,
+            speculate_k=spec_k, draft_rank=rank,
+            tokens_match_plain=(toks == plain_toks)))
         emit(f"serving/spec_k{spec_k}_rank{rank or 'full'}", us,
              f"tok_per_forward={rep.tokens_per_forward:.2f};"
              f"acceptance={rep.acceptance_rate:.2f};"
@@ -374,6 +441,10 @@ def serving():
              f"draft_forwards={rep.draft_forwards};"
              f"decoded={rep.decoded_tokens};"
              f"tokens_match_plain={toks == plain_toks}")
+
+    out = write_serving_json(json_rows)
+    print(f"wrote {out} ({len(json_rows)} scenario rows, "
+          f"schema v{SERVING_SCHEMA_VERSION})", file=sys.stderr)
 
 
 ALL = {"table1": table1, "table2": table2, "fig5": fig5, "fig6": fig6,

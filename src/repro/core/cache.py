@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.obs.trace import NULL_TRACER
 
 
 def attn_cache_floats_per_token(cfg: ModelConfig) -> int:
@@ -119,8 +120,9 @@ class PagedKVPool:
     """
 
     def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, tracer=None):
         assert cfg.elitekv.enabled, "paged pool stores compressed streams only"
+        self.trace = tracer or NULL_TRACER   # obs: alloc/free/truncate events
         for p_pos in range(cfg.block_period):
             assert cfg.layer_kind(p_pos) == "attn", \
                 "paged serving supports attention-only stacks (see ROADMAP)"
@@ -154,7 +156,10 @@ class PagedKVPool:
         table = self._tables.setdefault(seq_id, [])
         need = -(-length // self.block_size) - len(table)
         if need > 0:
-            table.extend(self.allocator.alloc(need))
+            got = self.allocator.alloc(need)
+            table.extend(got)
+            self.trace.instant("alloc", track="pool", cat="pool", seq=seq_id,
+                               blocks=got, length=length)
         self._lengths[seq_id] = max(self._lengths.get(seq_id, 0), length)
 
     def can_fit(self, extra_tokens: int) -> bool:
@@ -176,12 +181,19 @@ class PagedKVPool:
         table = self._tables.get(seq_id, [])
         keep = -(-length // self.block_size)
         if keep < len(table):
-            self.allocator.free(table[keep:])
+            freed = table[keep:]
+            self.allocator.free(freed)
             del table[keep:]
+            self.trace.instant("free", track="pool", cat="pool", seq=seq_id,
+                               blocks=freed, reason="truncate", length=length)
         self._lengths[seq_id] = length
 
     def free_seq(self, seq_id: int) -> None:
-        self.allocator.free(self._tables.pop(seq_id, []))
+        blocks = self._tables.pop(seq_id, [])
+        if blocks:
+            self.trace.instant("free", track="pool", cat="pool", seq=seq_id,
+                               blocks=blocks, reason="release")
+        self.allocator.free(blocks)
         self._lengths.pop(seq_id, None)
 
     def reset(self) -> None:
@@ -363,14 +375,16 @@ class BlockManager:
         if length <= 0:
             self.release(seq_id)
             return None
-        # gather the victim's slots on device, then transfer just those —
-        # host traffic is O(sequence), not O(pool)
-        slots = jnp.asarray(self.pool.flat_slots(seq_id, np.arange(length)))
-        streams = {p_key: {name: np.asarray(arr[:, slots])
-                           for name, arr in layer.items()}
-                   for p_key, layer in self.pool.pages.items()}
-        self.release(seq_id)
-        swapped = SwappedSeq(length=length, streams=streams)
+        with self.pool.trace.span("swap_out", track="pool", cat="swap",
+                                  seq=seq_id, length=length):
+            # gather the victim's slots on device, then transfer just those —
+            # host traffic is O(sequence), not O(pool)
+            slots = jnp.asarray(self.pool.flat_slots(seq_id, np.arange(length)))
+            streams = {p_key: {name: np.asarray(arr[:, slots])
+                               for name, arr in layer.items()}
+                       for p_key, layer in self.pool.pages.items()}
+            self.release(seq_id)
+            swapped = SwappedSeq(length=length, streams=streams)
         self.swap_outs += 1
         self.swapped_bytes += swapped.nbytes()
         return swapped
@@ -379,13 +393,15 @@ class BlockManager:
         """Allocate a fresh chain and scatter the host copy back.  Raises
         ``OutOfBlocks`` if the prefix does not fit (caller defers admission)."""
         self.pool.ensure_capacity(seq_id, swapped.length)
-        slots = jnp.asarray(self.pool.flat_slots(seq_id,
-                                                 np.arange(swapped.length)))
-        for p_key, layer in swapped.streams.items():
-            self.pool.pages[p_key] = {
-                name: self.pool.pages[p_key][name].at[:, slots].set(
-                    jnp.asarray(host, self.pool.pages[p_key][name].dtype))
-                for name, host in layer.items()}
+        with self.pool.trace.span("swap_in", track="pool", cat="swap",
+                                  seq=seq_id, length=swapped.length):
+            slots = jnp.asarray(self.pool.flat_slots(seq_id,
+                                                     np.arange(swapped.length)))
+            for p_key, layer in swapped.streams.items():
+                self.pool.pages[p_key] = {
+                    name: self.pool.pages[p_key][name].at[:, slots].set(
+                        jnp.asarray(host, self.pool.pages[p_key][name].dtype))
+                    for name, host in layer.items()}
         self.swap_ins += 1
 
 

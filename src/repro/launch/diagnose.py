@@ -6,15 +6,131 @@ The "profile" available without hardware is the partitioned HLO — this tool
 is the lens the §Perf hypothesis loop looks through.
 
   python -m repro.launch.diagnose --arch tinyllama_1_1b --shape train_4k
+
+Offline trace analysis (docs/observability.md) — summarise a Chrome trace
+written by ``launch/serve.py --trace``:
+
+  python -m repro.launch.diagnose trace-summary trace.json [--top 8]
+
+prints the phase-time table, kernel-span totals, the per-request lifecycle
+table (TTFT / residency / retirement reason), the most-preempted requests,
+and an ASCII pool-occupancy timeline — the terminal view of what Perfetto
+renders graphically.
 """
 import argparse
+import json
 import re
-from collections import Counter
+import sys
+from collections import Counter, defaultdict
+from pathlib import Path
 
 import numpy as np
 
+_SPARK = " ▁▂▃▄▅▆▇█"
 
-def main():
+
+def _sparkline(samples, width):
+    """Bin (ts, value) samples into ``width`` columns of block glyphs; each
+    column shows the max value seen in its time bin (last value carried
+    forward through empty bins — counters hold between updates)."""
+    if not samples:
+        return "", 0.0
+    t0, t1 = samples[0][0], samples[-1][0]
+    span = max(t1 - t0, 1e-9)
+    peak = max(v for _, v in samples) or 1.0
+    cols = [None] * width
+    for ts, v in samples:
+        c = min(int((ts - t0) / span * width), width - 1)
+        cols[c] = v if cols[c] is None else max(cols[c], v)
+    out, last = [], 0.0
+    for c in cols:
+        last = last if c is None else c
+        out.append(_SPARK[round(last / peak * (len(_SPARK) - 1))])
+    return "".join(out), peak
+
+
+def trace_summary(argv):
+    ap = argparse.ArgumentParser(
+        prog="diagnose trace-summary",
+        description="summarise a Chrome trace written by serve.py --trace")
+    ap.add_argument("trace", help="trace-event JSON path")
+    ap.add_argument("--top", type=int, default=8,
+                    help="rows in the preempted/requests tables")
+    ap.add_argument("--width", type=int, default=64,
+                    help="columns in the occupancy timeline")
+    args = ap.parse_args(argv)
+
+    events = json.loads(Path(args.trace).read_text())["traceEvents"]
+    spans = defaultdict(lambda: [0.0, 0])     # (cat, name) -> [ms, calls]
+    reqs = defaultdict(dict)                  # uid -> lifecycle timestamps
+    preempts = Counter()
+    occupancy, slots = [], []
+    for e in events:
+        ph, name, uid = e.get("ph"), e.get("name", ""), \
+            (e.get("args") or {}).get("uid")
+        if ph == "X":
+            agg = spans[(e.get("cat", "event"), name)]
+            agg[0] += e.get("dur", 0.0) / 1e3
+            agg[1] += 1
+        elif ph == "i" and uid is not None:
+            if name in ("submit", "first_token", "retire"):
+                reqs[uid][name] = e["ts"]
+                if name == "retire":
+                    reqs[uid]["reason"] = e["args"].get("reason", "?")
+                    reqs[uid]["tokens"] = e["args"].get("tokens", 0)
+            elif name == "preempt":
+                preempts[uid] += 1
+        elif ph == "C" and name == "pool_blocks_used":
+            occupancy.append((e["ts"], float(e["args"]["value"])))
+        elif ph == "C" and name == "slots_occupied":
+            slots.append((e["ts"], float(e["args"]["value"])))
+
+    for cat, title in (("phase", "phase time"), ("kernel", "kernel spans"),
+                       ("swap", "swap traffic")):
+        rows = sorted(((n, ms, c) for (ct, n), (ms, c) in spans.items()
+                       if ct == cat), key=lambda r: -r[1])
+        if not rows:
+            continue
+        total = sum(ms for _, ms, _ in rows) or 1.0
+        print(f"== {title} ==")
+        for n, ms, c in rows:
+            print(f"  {n:<14s} {ms:9.1f}ms  {c:5d} calls  "
+                  f"{100 * ms / total:3.0f}%")
+
+    done = sorted(reqs.items())
+    if done:
+        print(f"== requests ({len(done)} submitted, "
+              f"{sum('retire' in r for _, r in done)} retired) ==")
+        print(f"  {'uid':>4s} {'ttft_ms':>8s} {'total_ms':>9s} "
+              f"{'tokens':>6s} {'reason':<7s} preempts")
+        for uid, r in done[:args.top]:
+            ttft = (f"{(r['first_token'] - r['submit']) / 1e3:8.1f}"
+                    if "first_token" in r and "submit" in r else f"{'—':>8s}")
+            total = (f"{(r['retire'] - r['submit']) / 1e3:9.1f}"
+                     if "retire" in r and "submit" in r else f"{'—':>9s}")
+            print(f"  {uid:>4d} {ttft} {total} {r.get('tokens', 0):>6} "
+                  f"{r.get('reason', 'live'):<7s} {preempts.get(uid, 0)}")
+        if len(done) > args.top:
+            print(f"  ... {len(done) - args.top} more")
+    if preempts:
+        worst = ", ".join(f"req{u}×{c}" for u, c in
+                          preempts.most_common(args.top))
+        print(f"== top preempted requests ==\n  {worst} "
+              f"({sum(preempts.values())} evictions total)")
+
+    for samples, title, unit in ((occupancy, "pool occupancy", "blocks"),
+                                 (slots, "slots occupied", "slots")):
+        line, peak = _sparkline(samples, args.width)
+        if line:
+            t_ms = (samples[-1][0] - samples[0][0]) / 1e3
+            print(f"== {title} (peak {peak:.0f} {unit} over {t_ms:.0f}ms) ==")
+            print(f"  [{line}]")
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "trace-summary":
+        return trace_summary(argv[1:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
@@ -24,7 +140,7 @@ def main():
     ap.add_argument("--scan", action="store_true", help="use scan lowering")
     ap.add_argument("--param-dtype", default="float32")
     ap.add_argument("--top", type=int, default=15)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     from repro.launch import dryrun
     res, compiled, cfg = dryrun.lower_cell(

@@ -49,6 +49,16 @@ the scheduler metrics line:
 
 plus the pool accounting (live vs allocated bytes, block size, free blocks).
 docs/serving.md walks through every field.
+
+Observability (docs/observability.md): ``--trace out.json`` records the run
+into a ring-buffer tracer and writes a Chrome trace-event timeline — open it
+at https://ui.perfetto.dev — with one row per pool slot (request residency),
+plus scheduler phase spans, pool block churn, and occupancy counters;
+``--metrics-out metrics.prom`` exports the process-wide metrics registry in
+Prometheus text format after the drain.  Tracing never perturbs the run:
+traced and untraced streams are token-identical (regression-tested).
+Summarise a written trace offline with
+``python -m repro.launch.diagnose trace-summary out.json``.
 """
 from __future__ import annotations
 
@@ -64,6 +74,7 @@ from repro.configs import get_config
 from repro.core.cache import model_cache_floats_per_token
 from repro.core.convert import pick_dims
 from repro.models import lm
+from repro.obs import REGISTRY, Tracer, write_chrome_trace
 from repro.runtime import serve_loop
 
 
@@ -71,6 +82,10 @@ def serve_stream(params, buffers, cfg, args):
     """Poisson request-stream mode: exercises admission, mid-flight prefill,
     retirement and block recycling; prints the scheduler metrics."""
     rng = np.random.default_rng(args.seed)
+    tracer = Tracer(capacity=args.trace_capacity) if args.trace else None
+    if tracer is not None:
+        from repro.kernels import ops
+        ops.set_kernel_tracer(tracer)       # eager kernel dispatches, if any
     scfg = serve_loop.SchedulerConfig(
         max_slots=args.max_slots, block_size=args.block_size,
         num_blocks=args.num_blocks, eos_id=args.eos_id,
@@ -80,7 +95,8 @@ def serve_stream(params, buffers, cfg, args):
         prefill_batch_lanes=args.prefill_lanes,
         admission=args.admission, eviction=args.eviction,
         speculate_k=args.speculate, draft_rank=args.draft_rank)
-    sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+    sched = serve_loop.Scheduler(params, buffers, cfg, scfg, tracer=tracer,
+                                 metrics=REGISTRY)
     p_lo = min(4, args.prompt_len)          # sampling floors, valid even for
     n_lo = min(4, args.new_tokens)          # --prompt-len/--new-tokens < 4
     t = 0.0
@@ -126,6 +142,19 @@ def serve_stream(params, buffers, cfg, args):
         print(f"block reuse: peak {report.pool_high_water_blocks} blocks served "
               f"a workload whose naive footprint is {report.naive_blocks} "
               f"({report.block_reuse_ratio:.2f}x)")
+    if report.phase_ms:
+        print(f"phases: {report.phase_table()} "
+              f"(step wall {report.step_wall_ms_total:.0f}ms)")
+    if tracer is not None:
+        path = write_chrome_trace(args.trace, tracer)
+        print(f"trace: {report.trace_events} events "
+              f"({report.trace_dropped} dropped by the ring) -> {path} "
+              f"(open in https://ui.perfetto.dev)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w", encoding="utf-8") as f:
+            f.write(REGISTRY.to_prometheus())
+        print(f"metrics: {len(REGISTRY.names())} instruments -> "
+              f"{args.metrics_out} (Prometheus text format)")
     return report
 
 
@@ -176,6 +205,16 @@ def main(argv=None):
                     help="nucleus sampling mass (1 = full softmax)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base PRNG seed; request i samples with seed+i")
+    # observability (docs/observability.md)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event timeline of the stream "
+                         "run to this path (view at ui.perfetto.dev)")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="tracer ring-buffer capacity (oldest events drop "
+                         "beyond this)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics registry in Prometheus text "
+                         "format to this path after the run")
     args = ap.parse_args(argv)
 
     base = get_config(args.arch)
@@ -194,6 +233,9 @@ def main(argv=None):
         if args.rate <= 0:
             ap.error("--rate must be > 0 (mean arrivals per decode step)")
         return serve_stream(params, buffers, cfg, args)
+    if args.trace or args.metrics_out:
+        ap.error("--trace/--metrics-out instrument the paged scheduler; "
+                 "add --stream")
     prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len),
                                  0, cfg.vocab_size, jnp.int32)
     t0 = time.time()

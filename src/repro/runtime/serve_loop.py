@@ -56,10 +56,24 @@ would have seen, and the count-folded sampling PRNG re-draws the exact same
 token.  ``admission="watermark"`` keeps the legacy reservation policy
 (worst-case remaining blocks of every resident held back, so growth can
 never fail) for comparison runs — it trades occupancy for never preempting.
+
+Observability (docs/observability.md): the scheduler accepts a
+``repro.obs.trace.Tracer`` and a ``repro.obs.metrics.MetricsRegistry``.  Every
+step is decomposed into host-observable **phases** (``PHASES``) — prefill /
+decode / draft / verify forwards, sampling, speculative accept bookkeeping,
+swap copies, plus an ``other`` residual — whose wall totals land in
+``ServeReport.phase_ms`` and, when a tracer is attached, as spans on the
+``scheduler`` timeline track; per-request lifecycle events (submit, admit,
+prefill chunks, preempt, retire) land on per-slot tracks and the pool emits
+its own alloc/free/swap/truncate events.  Instrumentation is passive: it
+reads clocks and appends host-side records, never touching PRNG or
+scheduling state, so a traced run emits bit-identical tokens to an untraced
+one (tests/test_obs.py pins this).
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -71,6 +85,17 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.cache import BlockManager, OutOfBlocks, PagedKVPool
 from repro.models import lm
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
+
+#: Host-observable phases of one scheduler step (``ServeReport.phase_ms``
+#: keys — all always present, zero-valued when a phase never ran).  ``other``
+#: is the per-step residual (admission, growth bookkeeping, host packing),
+#: computed so the phase totals sum to ``step_wall_ms_total``.  The jitted
+#: forwards are opaque to host timing, so the embedding dispatch is folded
+#: into its enclosing forward phase.
+PHASES = ("prefill", "decode", "draft", "verify", "sample", "accept",
+          "swap", "other")
 
 
 def make_prefill_step(cfg: ModelConfig, mesh=None, constrain=None,
@@ -398,6 +423,22 @@ class ServeReport:
                                           # forward (plain ≡ 1.0; spec =
                                           # 1 + mean_accepted)
     acceptance_by_bucket: Dict[str, float] = dataclasses.field(default_factory=dict)
+    phase_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #   ^ wall ms per step phase over the whole run (keys == PHASES; a phase
+    #     that never ran reports exactly 0.0).  ``other`` is the residual, so
+    #     sum(phase_ms.values()) ≈ step_wall_ms_total.
+    step_wall_ms_total: float = 0.0       # Σ wall ms of every step() call
+    trace_events: int = 0                 # events emitted to the tracer
+    trace_dropped: int = 0                # events the ring buffer evicted
+
+    def phase_table(self) -> str:
+        """One-line per-phase breakdown: ``phase=total_ms(share%)`` for every
+        phase that ran (launch/serve.py prints it; ``trace-summary``
+        reconstructs the same table from an exported timeline)."""
+        total = max(self.step_wall_ms_total, 1e-9)
+        parts = [f"{k}={v:.1f}ms({100 * v / total:.0f}%)"
+                 for k, v in self.phase_ms.items() if v > 0]
+        return " ".join(parts) if parts else "(no phases recorded)"
 
     def summary(self) -> str:
         bucket = "".join(f" ttft[{k}]={v:.1f}" for k, v in
@@ -425,12 +466,15 @@ class Scheduler:
     """Continuous-batching serving loop over the paged compressed cache."""
 
     def __init__(self, params, buffers, cfg: ModelConfig,
-                 scfg: SchedulerConfig, mesh=None, moe_impl: str = "ragged"):
+                 scfg: SchedulerConfig, mesh=None, moe_impl: str = "ragged",
+                 tracer=None, metrics=None):
         assert cfg.elitekv.enabled, "paged serving requires an EliteKV config"
         assert scfg.eviction in ("recompute", "swap"), scfg.eviction
         self.params, self.buffers, self.cfg, self.scfg = params, buffers, cfg, scfg
+        self.trace = tracer or NULL_TRACER
+        self.metrics = metrics or MetricsRegistry()
         self.pool = PagedKVPool(cfg, scfg.num_blocks, scfg.block_size,
-                                dtype=scfg.cache_dtype)
+                                dtype=scfg.cache_dtype, tracer=self.trace)
         self.bm = BlockManager(self.pool, policy=scfg.admission)
         self.slots: List[Optional[Request]] = [None] * scfg.max_slots
         self.waiting: collections.deque = collections.deque()
@@ -448,6 +492,39 @@ class Scheduler:
         self._spec_windows = 0              # (lane, step) verify windows run
         self._lane_steps = 0                # Σ live lanes over decode forwards
         self._decode_appended = 0           # tokens appended by decode/verify
+        # -- observability state (docs/observability.md) ---------------------
+        self._phase_ms = {p: 0.0 for p in PHASES}
+        self._step_wall_ms_total = 0.0
+        m = self.metrics
+        self._m_submitted = m.counter(
+            "serve_requests_submitted_total", "requests submitted")
+        self._m_completed = m.counter(
+            "serve_requests_completed_total", "requests retired (eos|budget)")
+        self._m_decoded = m.counter(
+            "serve_tokens_decoded_total", "tokens appended by decode/verify")
+        self._m_prefill_tokens = m.counter(
+            "serve_prefill_tokens_total", "tokens cached by prefill forwards")
+        self._m_preemptions = m.counter(
+            "serve_preemptions_total", "residents evicted on OutOfBlocks")
+        self._m_swap_outs = m.counter(
+            "serve_swap_outs_total", "preemptions served by host swap-out")
+        self._m_swap_ins = m.counter(
+            "serve_swap_ins_total", "swapped prefixes restored to the pool")
+        self._m_draft_proposed = m.counter(
+            "serve_draft_proposed_total", "speculative draft tokens proposed")
+        self._m_draft_accepted = m.counter(
+            "serve_draft_accepted_total", "draft tokens that survived verify")
+        self._m_blocks_used = m.gauge(
+            "serve_pool_blocks_used", "pool blocks currently allocated")
+        self._m_slots = m.gauge(
+            "serve_slots_occupied", "scheduler slots currently resident")
+        self._m_step_ms = m.histogram(
+            "serve_step_ms", "decode/verify macro-step wall milliseconds")
+        self._m_ttft_ms = m.histogram(
+            "serve_ttft_ms", "request arrival to first token, wall ms")
+        self._m_phase = {p: m.counter(f"serve_phase_{p}_ms_total",
+                                      f"total wall ms spent in the {p} phase")
+                         for p in PHASES}
         # the draft shares params unless a real rank truncation is requested
         self.draft_params = (
             lm.make_draft_params(params, cfg, scfg.draft_rank)
@@ -498,6 +575,56 @@ class Scheduler:
         self._verify = jax.jit(_verify, donate_argnums=donate)
         self._sample = jax.jit(sample_tokens)
 
+    # -- observability ------------------------------------------------------
+    @contextlib.contextmanager
+    def _phase(self, name: str, **args):
+        """Attribute the enclosed wall time to step phase ``name`` — into
+        ``phase_ms``, the metrics registry, and (when tracing) a span on the
+        ``scheduler`` track.  Phases never nest (the residual ``other`` would
+        double-count), which tools/check_trace.py can verify from the
+        exported timeline."""
+        with self.trace.span(name, track="scheduler", cat="phase", **args):
+            t0 = time.perf_counter()
+            try:
+                yield
+            finally:
+                dt_ms = (time.perf_counter() - t0) * 1e3
+                self._phase_ms[name] += dt_ms
+                self._m_phase[name].inc(dt_ms)
+
+    def _measured_phase_ms(self) -> float:
+        return sum(v for k, v in self._phase_ms.items() if k != "other")
+
+    def _stuck_report(self, max_steps: int) -> str:
+        """Diagnostic payload for the did-not-drain failure: per-request
+        status of every resident and waiter plus the tracer's recent event
+        tail, so a stuck-pool run is debuggable from the exception alone."""
+        lines = [f"scheduler did not drain in {max_steps} steps"]
+        lines.append(f"pool: {self.pool.allocator.num_used}/"
+                     f"{self.pool.num_blocks} blocks used, "
+                     f"{self.pool.allocator.num_free} free, "
+                     f"block_size={self.pool.block_size}")
+        for i, r in enumerate(self.slots):
+            if r is None:
+                lines.append(f"slot{i}: empty")
+                continue
+            lines.append(
+                f"slot{i}: uid={r.uid} prefill={r.prefill_pos}/"
+                f"{len(r.prefill_source())} generated="
+                f"{len(r.generated)}/{r.max_new_tokens} "
+                f"pool_len={self.pool.length(r.uid)} "
+                f"blocks={len(self.pool.block_table(r.uid))} "
+                f"preempted={len(r.preempted_at)}x")
+        for r in list(self.waiting)[:8]:
+            lines.append(f"waiting: uid={r.uid} arrival={r.arrival:.1f} "
+                         f"prefill_src={len(r.prefill_source())} "
+                         f"swapped={r.swapped is not None} "
+                         f"preempted={len(r.preempted_at)}x")
+        if len(self.waiting) > 8:
+            lines.append(f"waiting: … {len(self.waiting) - 8} more")
+        lines.append(self.trace.format_tail(40))
+        return "\n".join(lines)
+
     # -- request intake -----------------------------------------------------
     def submit(self, req: Request) -> None:
         req.max_new_tokens = min(req.max_new_tokens, self.scfg.max_new_tokens)
@@ -511,6 +638,10 @@ class Scheduler:
         req.submit_wall = time.perf_counter()
         self.waiting.append(req)
         self.naive_blocks += self._worst_case_blocks(req)
+        self._m_submitted.inc()
+        self.trace.instant("submit", track="scheduler", cat="request",
+                           uid=req.uid, prompt=len(req.prompt),
+                           budget=req.max_new_tokens, arrival=req.arrival)
 
     def _worst_case_blocks(self, req: Request) -> int:
         return -(-(len(req.prompt) + req.max_new_tokens) // self.scfg.block_size)
@@ -546,10 +677,17 @@ class Scheduler:
         Block allocation otherwise happens on demand, chunk by chunk, in
         ``_prefill_work`` — and prefill itself is interleaved with decode."""
         if req.swapped is not None:
-            self.bm.swap_in(req.uid, req.swapped)
+            with self._phase("swap", direction="in", uid=req.uid):
+                self.bm.swap_in(req.uid, req.swapped)
             req.swapped = None
+            self._m_swap_ins.inc()
         self.bm.register(req.uid, self._worst_case_blocks(req))
         self.slots[slot] = req
+        self.trace.begin(f"req{req.uid}", track=f"slot{slot}", cat="request",
+                         uid=req.uid)
+        self.trace.instant("admit", track="scheduler", cat="request",
+                           uid=req.uid, slot=slot,
+                           queued_steps=self.t - req.arrival)
 
     # -- preemption ---------------------------------------------------------
     def _decode_ready(self, req: Request) -> bool:
@@ -582,13 +720,22 @@ class Scheduler:
                 req.prefill_pos = cached
             else:
                 cached = req.prefill_pos
-            req.swapped = self.bm.preempt_swap_out(req.uid, cached)
+            with self._phase("swap", direction="out", uid=req.uid):
+                req.swapped = self.bm.preempt_swap_out(req.uid, cached)
+            if req.swapped is not None:
+                self._m_swap_outs.inc()
         else:
             if req.generated:
                 req.prefill_src = np.concatenate(
                     [req.prompt, np.asarray(req.generated, np.int32)])
             req.prefill_pos = 0
             self.bm.preempt_recompute(req.uid)
+        self._m_preemptions.inc()
+        self.trace.end(f"req{req.uid}", track=f"slot{slot}", cat="request",
+                       reason="preempt")
+        self.trace.instant("preempt", track="scheduler", cat="request",
+                           uid=req.uid, slot=slot, mode=self.scfg.eviction,
+                           generated=len(req.generated))
         self.slots[slot] = None
         self.waiting.appendleft(req)
 
@@ -643,9 +790,14 @@ class Scheduler:
         streams are exactly invariant.)"""
         tok = self._sample_one(req, last_row, len(req.generated))
         req.generated.append(tok)
+        self._m_decoded.inc()               # prefill-sampled tokens count too
         if req.first_token_step < 0:        # TTFT survives preemption
             req.first_token_wall = time.perf_counter()
             req.first_token_step = self.t
+            self._m_ttft_ms.observe((req.first_token_wall - req.submit_wall)
+                                    * 1e3)
+            self.trace.instant("first_token", track="scheduler",
+                               cat="request", uid=req.uid, step=self.t)
 
     def _run_oneshot(self, slot: int, req: Request) -> None:
         """Whole-source causal prefill in one call, padded to the bucket."""
@@ -657,13 +809,19 @@ class Scheduler:
         tokens = np.zeros((1, pad), np.int32)
         tokens[0, :sp] = src
         sm = self.pool.prefill_slot_mapping(req.uid, 0, sp, pad)[None]
-        logits, self.pool.pages = self._prefill(
-            self.params, self.buffers, jnp.asarray(tokens),
-            self.pool.pages, jnp.asarray(sm))
+        with self._phase("prefill", lanes=1, tokens=sp):
+            logits, self.pool.pages = self._prefill(
+                self.params, self.buffers, jnp.asarray(tokens),
+                self.pool.pages, jnp.asarray(sm))
+            jax.block_until_ready(logits)
+        self.trace.instant("prefill_chunk", track=f"slot{slot}",
+                           cat="request", uid=req.uid, start=0, n=sp)
+        self._m_prefill_tokens.inc(sp)
         req.prefill_pos = sp
         self.prefill_chunks += 1
         self._prefill_lanes_total += 1
-        self._sample_prefill_token(req, logits[0, sp - 1])
+        with self._phase("sample"):
+            self._sample_prefill_token(req, logits[0, sp - 1])
         self._maybe_finish(slot, req.generated[-1])
 
     def _prefill_work(self) -> None:
@@ -716,16 +874,23 @@ class Scheduler:
             starts[lane] = start            # chunk offset == cached prefix len
             seq_ids[lane] = req.uid
         bt = self.pool.block_table_array(seq_ids, scfg.max_blocks_per_seq)
-        logits, self.pool.pages = self._prefill_batch(
-            self.params, self.buffers, jnp.asarray(tokens), self.pool.pages,
-            jnp.asarray(sms), jnp.asarray(starts), jnp.asarray(bt),
-            jnp.asarray(starts))
+        n_toks = sum(n for _, _, _, n in selected)
+        with self._phase("prefill", lanes=len(selected), tokens=n_toks):
+            logits, self.pool.pages = self._prefill_batch(
+                self.params, self.buffers, jnp.asarray(tokens), self.pool.pages,
+                jnp.asarray(sms), jnp.asarray(starts), jnp.asarray(bt),
+                jnp.asarray(starts))
+            jax.block_until_ready(logits)
+        self._m_prefill_tokens.inc(n_toks)
         self.prefill_chunks += 1
         self._prefill_lanes_total += len(selected)
         for lane, (slot, req, start, n) in enumerate(selected):
+            self.trace.instant("prefill_chunk", track=f"slot{slot}",
+                               cat="request", uid=req.uid, start=start, n=n)
             req.prefill_pos = start + n
             if req.prefill_pos >= len(req.prefill_source()):
-                self._sample_prefill_token(req, logits[lane, n - 1])
+                with self._phase("sample"):
+                    self._sample_prefill_token(req, logits[lane, n - 1])
                 self._maybe_finish(slot, req.generated[-1])
 
     # -- retirement ---------------------------------------------------------
@@ -741,6 +906,12 @@ class Scheduler:
         self.bm.release(req.uid)            # blocks recycle immediately
         self.finished.append(req)
         self.slots[slot] = None
+        self._m_completed.inc()
+        self.trace.end(f"req{req.uid}", track=f"slot{slot}", cat="request",
+                       reason=req.finish_reason)
+        self.trace.instant("retire", track="scheduler", cat="request",
+                           uid=req.uid, reason=req.finish_reason,
+                           tokens=len(req.generated))
 
     # -- one scheduler iteration -------------------------------------------
     def step(self) -> bool:
@@ -750,6 +921,11 @@ class Scheduler:
         self._prefill_work()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         self.peak_slots = max(self.peak_slots, len(occupied))
+        self._m_blocks_used.set(self.pool.allocator.num_used)
+        self._m_slots.set(len(occupied))
+        self.trace.counter("pool_blocks_used", self.pool.allocator.num_used,
+                           track="pool")
+        self.trace.counter("slots_occupied", len(occupied), track="scheduler")
         # decode lanes: slots whose prefill source is fully cached, oldest
         # first — chain growth may preempt the youngest residents (who then
         # sit out this step in the queue).
@@ -809,25 +985,30 @@ class Scheduler:
         bt = self.pool.block_table_array(seq_ids, scfg.max_blocks_per_seq)
 
         t0 = time.perf_counter()
-        logits, self.pool.pages = self._decode(self.params, self.buffers,
-                                               jnp.asarray(tokens),
-                                               self.pool.pages,
-                                               jnp.asarray(sm), jnp.asarray(bt),
-                                               jnp.asarray(lengths))
-        if np.any(temps > 0):
-            nxt = np.asarray(self._sample(logits[:, -1, :], jnp.asarray(temps),
-                                          jnp.asarray(top_ps),
-                                          jnp.asarray(seeds),
-                                          jnp.asarray(counts)))
-        else:                               # all-greedy step: skip the
-            nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))  # sampler
+        with self._phase("decode", lanes=len(active)):
+            logits, self.pool.pages = self._decode(self.params, self.buffers,
+                                                   jnp.asarray(tokens),
+                                                   self.pool.pages,
+                                                   jnp.asarray(sm), jnp.asarray(bt),
+                                                   jnp.asarray(lengths))
+            jax.block_until_ready(logits)
+        with self._phase("sample"):
+            if np.any(temps > 0):
+                nxt = np.asarray(self._sample(logits[:, -1, :], jnp.asarray(temps),
+                                              jnp.asarray(top_ps),
+                                              jnp.asarray(seeds),
+                                              jnp.asarray(counts)))
+            else:                           # all-greedy step: skip the
+                nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))  # sampler
         self._step_wall_ms.append((time.perf_counter() - t0) * 1e3)
+        self._m_step_ms.observe(self._step_wall_ms[-1])
         self._lane_steps += len(active)
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])
             req.generated.append(tok)
             self._decode_appended += 1
+            self._m_decoded.inc()
             self._maybe_finish(i, tok)
         return True
 
@@ -908,22 +1089,24 @@ class Scheduler:
                 seeds[i] = req.seed
                 counts[i] = len(req.generated) + j  # index of the proposal
             sm = self.pool.slot_mapping(seq_ids, positions)
-            logits, self.pool.pages = self._decode(
-                self.draft_params, self.buffers, jnp.asarray(tokens),
-                self.pool.pages, jnp.asarray(sm), bt,
-                jnp.asarray(lengths))
-            self.draft_forwards += 1
-            sampled = bool(np.any(temps > 0))
-            if sampled:
-                nxt = np.asarray(self._sample(
-                    logits[:, -1, :], jnp.asarray(temps), jnp.asarray(top_ps),
-                    jnp.asarray(seeds), jnp.asarray(counts)))
-                # draft distributions are only needed for the accept ratio —
-                # all-greedy macro-steps skip the host transfer entirely
-                rows = np.asarray(logits[:, -1, :])
-            else:
-                nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
-                rows = None
+            with self._phase("draft", j=j, lanes=len(live)):
+                logits, self.pool.pages = self._decode(
+                    self.draft_params, self.buffers, jnp.asarray(tokens),
+                    self.pool.pages, jnp.asarray(sm), bt,
+                    jnp.asarray(lengths))
+                self.draft_forwards += 1
+                sampled = bool(np.any(temps > 0))
+                if sampled:
+                    nxt = np.asarray(self._sample(
+                        logits[:, -1, :], jnp.asarray(temps),
+                        jnp.asarray(top_ps),
+                        jnp.asarray(seeds), jnp.asarray(counts)))
+                    # draft distributions are only needed for the accept
+                    # ratio — all-greedy macro-steps skip the host transfer
+                    rows = np.asarray(logits[:, -1, :])
+                else:
+                    nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+                    rows = None
             for i in live:
                 drafts[i].append(int(nxt[i]))
                 if rows is not None:
@@ -943,39 +1126,46 @@ class Scheduler:
             sms[i] = self.pool.prefill_slot_mapping(req.uid, cur, w + 1, W)
             offs[i] = cur
             lengths[i] = cur + w + 1
-        logits, self.pool.pages = self._verify(
-            self.params, self.buffers, jnp.asarray(tokens), self.pool.pages,
-            jnp.asarray(sms), bt, jnp.asarray(offs),
-            jnp.asarray(lengths))
-        rows_all = np.asarray(logits)
+        with self._phase("verify", lanes=len(active)):
+            logits, self.pool.pages = self._verify(
+                self.params, self.buffers, jnp.asarray(tokens), self.pool.pages,
+                jnp.asarray(sms), bt, jnp.asarray(offs),
+                jnp.asarray(lengths))
+            rows_all = np.asarray(logits)
         self._step_wall_ms.append((time.perf_counter() - t0) * 1e3)
+        self._m_step_ms.observe(self._step_wall_ms[-1])
         self._lane_steps += len(active)
 
         # -- accept a prefix per lane, roll the chain back over the rest -----
-        for i in active:
-            req = self.slots[i]
-            cur, w = windows[i]
-            out = self._accept_window(req, drafts[i][:w], dlogits[i][:w],
-                                      rows_all[i])
-            n_acc = len(out) - 1
-            self.bm.truncate(req.uid, cur + n_acc + 1)
-            appended = 0
-            for tok in out:
-                req.generated.append(tok)
-                appended += 1
-                self._maybe_finish(i, tok)
-                if self.slots[i] is None:
-                    break                   # EOS/budget mid-window: rest drops
-            self._decode_appended += appended
-            # count only accepted drafts that were actually *kept* — an EOS
-            # cutting an accepted prefix short must not inflate acceptance
-            # (keeps tokens_per_forward == 1 + mean_accepted away from EOS)
-            kept = min(n_acc, appended)
-            req.spec_proposed += w
-            req.spec_accepted += kept
-            self.draft_proposed += w
-            self.draft_accepted += kept
-            self._spec_windows += 1
+        with self._phase("accept", lanes=len(active)):
+            for i in active:
+                req = self.slots[i]
+                cur, w = windows[i]
+                out = self._accept_window(req, drafts[i][:w], dlogits[i][:w],
+                                          rows_all[i])
+                n_acc = len(out) - 1
+                self.bm.truncate(req.uid, cur + n_acc + 1)
+                appended = 0
+                for tok in out:
+                    req.generated.append(tok)
+                    appended += 1
+                    self._maybe_finish(i, tok)
+                    if self.slots[i] is None:
+                        break               # EOS/budget mid-window: rest drops
+                self._decode_appended += appended
+                self._m_decoded.inc(appended)
+                # count only accepted drafts that were actually *kept* — an
+                # EOS cutting an accepted prefix short must not inflate
+                # acceptance (keeps tokens_per_forward == 1 + mean_accepted
+                # away from EOS)
+                kept = min(n_acc, appended)
+                req.spec_proposed += w
+                req.spec_accepted += kept
+                self.draft_proposed += w
+                self.draft_accepted += kept
+                self._m_draft_proposed.inc(w)
+                self._m_draft_accepted.inc(kept)
+                self._spec_windows += 1
         return True
 
     def _accept_window(self, req: Request, drafts: List[int],
@@ -1018,10 +1208,22 @@ class Scheduler:
             self.submit(r)
         t0 = time.perf_counter()
         steps = 0
-        while self.step():
+        while True:
+            s0 = time.perf_counter()
+            before = self._measured_phase_ms()
+            alive = self.step()
+            dt_ms = (time.perf_counter() - s0) * 1e3
+            self._step_wall_ms_total += dt_ms
+            # residual host time this step (admission, growth bookkeeping,
+            # packing) — keeps Σ phase_ms == step_wall_ms_total
+            other = dt_ms - (self._measured_phase_ms() - before)
+            self._phase_ms["other"] += max(0.0, other)
+            self._m_phase["other"].inc(max(0.0, other))
+            if not alive:
+                break
             steps += 1
             if steps > max_steps:
-                raise RuntimeError(f"scheduler did not drain in {max_steps} steps")
+                raise RuntimeError(self._stuck_report(max_steps))
         return self.report(time.perf_counter() - t0)
 
     def report(self, wall_s: float) -> ServeReport:
@@ -1064,7 +1266,11 @@ class Scheduler:
             mean_accepted=self.draft_accepted / max(self._spec_windows, 1),
             tokens_per_forward=(self._decode_appended
                                 / max(self._lane_steps, 1)),
-            acceptance_by_bucket=acceptance_by_prompt_bucket(fin))
+            acceptance_by_bucket=acceptance_by_prompt_bucket(fin),
+            phase_ms=dict(self._phase_ms),
+            step_wall_ms_total=self._step_wall_ms_total,
+            trace_events=self.trace.emitted if self.trace.enabled else 0,
+            trace_dropped=self.trace.dropped if self.trace.enabled else 0)
 
 
 def generate_paged(params, buffers, cfg: ModelConfig, prompts: jnp.ndarray,

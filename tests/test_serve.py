@@ -61,3 +61,51 @@ def test_train_driver_runs(capsys):
     hist = train_mod.main(["--arch", "tinyllama_1_1b", "--reduced", "--steps", "3",
                            "--batch", "2", "--seq", "32", "--log-every", "1"])
     assert len(hist) >= 1
+
+
+# ---------------------------------------------------------------------------
+# per-step phase breakdown (docs/observability.md)
+# ---------------------------------------------------------------------------
+
+def _stream_run(params, buffers, cfg, speculate=0):
+    rng = np.random.default_rng(9)
+    reqs = [serve_loop.Request(
+        uid=i,
+        prompt=rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(6, 14))).astype(np.int32),
+        max_new_tokens=6, arrival=i * 0.5) for i in range(3)]
+    scfg = serve_loop.SchedulerConfig(
+        max_slots=2, block_size=4, num_blocks=64, max_len=32,
+        prefill_bucket=4, prefill_chunk_tokens=4, speculate_k=speculate)
+    sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+    return sched.run(reqs)
+
+
+def test_phase_breakdown_plain_decode(tiny_elite_cfg, tiny_elite_model):
+    """Plain decode: phase keys are exactly PHASES, the phases that ran are
+    positive, speculative phases are exactly zero, and the breakdown sums to
+    the measured step wall time (the "other" residual closes the gap)."""
+    rep = _stream_run(*tiny_elite_model, tiny_elite_cfg)
+    assert set(rep.phase_ms) == set(serve_loop.PHASES)
+    for phase in ("prefill", "decode", "sample"):
+        assert rep.phase_ms[phase] > 0.0, phase
+    for phase in ("draft", "verify", "accept"):
+        assert rep.phase_ms[phase] == 0.0, phase   # never ran ⇒ exactly 0
+    assert rep.phase_ms["swap"] == 0.0             # ample pool: no eviction
+    total = rep.step_wall_ms_total
+    assert total > 0.0
+    assert abs(sum(rep.phase_ms.values()) - total) <= 0.02 * total + 1.0
+    assert rep.phase_ms["other"] >= 0.0            # residual never negative
+    table = rep.phase_table()
+    assert "decode=" in table and "draft=" not in table
+
+
+def test_phase_breakdown_speculative(tiny_elite_cfg, tiny_elite_model):
+    """Speculative decode routes steps through draft/verify/accept instead
+    of the plain decode phase; the sum invariant must still hold."""
+    rep = _stream_run(*tiny_elite_model, tiny_elite_cfg, speculate=2)
+    for phase in ("draft", "verify", "accept"):
+        assert rep.phase_ms[phase] > 0.0, phase
+    assert rep.phase_ms["decode"] == 0.0           # no plain decode steps ran
+    total = rep.step_wall_ms_total
+    assert abs(sum(rep.phase_ms.values()) - total) <= 0.02 * total + 1.0

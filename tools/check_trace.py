@@ -1,0 +1,269 @@
+#!/usr/bin/env python3
+"""Validate observability artifacts (docs/observability.md) — stdlib only.
+
+    python tools/check_trace.py trace.json [--metrics metrics.prom]
+
+Trace checks (Chrome trace-event JSON, the format serve.py --trace writes):
+
+* envelope: ``{"traceEvents": [...]}`` with a list of event records
+* every record has a known ``ph`` and the fields that phase requires
+  (``X`` → non-negative ``dur``; ``C`` → numeric ``args.value``; ``M`` →
+  a recognised metadata name)
+* every (pid, tid) that carries events has ``thread_name`` metadata
+* ``B``/``E`` events balance per (pid, tid) — every begin is closed by a
+  matching end, never cross-nested
+* ``X`` spans on one (pid, tid) track nest properly — a span either
+  contains or is disjoint from every other span on its track (partial
+  overlap means the emitter timed overlapping phases, which would
+  double-count wall time)
+* timestamps are non-negative and finite
+
+Metrics checks (Prometheus text exposition format):
+
+* every sample line parses as ``name{labels} value`` with a valid metric
+  name and a finite value
+* every sample belongs to a preceding ``# TYPE`` block
+* histograms are internally consistent: bucket counts are cumulative
+  (non-decreasing as ``le`` ascends), the ``+Inf`` bucket equals
+  ``_count``, and ``_sum`` / ``_count`` are both present
+
+Exit status 0 and a one-line summary on success; every violation is
+printed and the exit status is 1.  CI's ``obs`` job runs this against a
+freshly traced serve run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import re
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+ERRORS: list = []
+
+_PH_KNOWN = frozenset("XBEiCM")
+_META_NAMES = frozenset({"process_name", "process_labels",
+                         "process_sort_index", "thread_name",
+                         "thread_sort_index"})
+_METRIC_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)(?:\s+\d+)?$")
+
+
+def err(msg: str) -> None:
+    ERRORS.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def _num(v) -> bool:
+    return isinstance(v, (int, float)) and math.isfinite(v) \
+        and not isinstance(v, bool)
+
+
+# ---------------------------------------------------------------------------
+# trace-event JSON
+# ---------------------------------------------------------------------------
+
+def check_trace(path: Path) -> int:
+    try:
+        data = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        err(f"{path}: unreadable or invalid JSON ({e})")
+        return 0
+    if not isinstance(data, dict) or not isinstance(
+            data.get("traceEvents"), list):
+        err(f"{path}: missing traceEvents list envelope")
+        return 0
+    events = data["traceEvents"]
+
+    named_tids = set()                       # (pid, tid) with thread_name
+    used_tids = set()                        # (pid, tid) carrying events
+    be_stacks = defaultdict(list)            # (pid, tid) -> open B names
+    x_spans = defaultdict(list)              # (pid, tid) -> (start, end, name)
+    for i, e in enumerate(events):
+        where = f"{path}: traceEvents[{i}]"
+        if not isinstance(e, dict):
+            err(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph not in _PH_KNOWN:
+            err(f"{where}: unknown ph {ph!r}")
+            continue
+        if not isinstance(e.get("name"), str) or not e["name"]:
+            err(f"{where}: missing name")
+            continue
+        key = (e.get("pid"), e.get("tid"))
+        if ph == "M":
+            if e["name"] not in _META_NAMES:
+                err(f"{where}: unknown metadata name {e['name']!r}")
+            if e["name"] == "thread_name":
+                named_tids.add(key)
+            continue
+        ts = e.get("ts")
+        if not _num(ts) or ts < 0:
+            err(f"{where}: bad ts {ts!r}")
+            continue
+        used_tids.add(key)
+        if ph == "X":
+            dur = e.get("dur")
+            if not _num(dur) or dur < 0:
+                err(f"{where}: X span with bad dur {dur!r}")
+                continue
+            x_spans[key].append((ts, ts + dur, e["name"]))
+        elif ph == "B":
+            be_stacks[key].append(e["name"])
+        elif ph == "E":
+            stack = be_stacks[key]
+            if not stack:
+                err(f"{where}: E {e['name']!r} with no open B on tid {key}")
+            elif stack[-1] != e["name"]:
+                err(f"{where}: E {e['name']!r} cross-nests open B "
+                    f"{stack[-1]!r} on tid {key}")
+                stack.pop()
+            else:
+                stack.pop()
+        elif ph == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not _num(args.get("value")):
+                err(f"{where}: counter without numeric args.value")
+        elif ph == "i":
+            if e.get("s", "t") not in ("g", "p", "t"):
+                err(f"{where}: instant with bad scope {e.get('s')!r}")
+
+    for key, stack in sorted(be_stacks.items()):
+        if stack:
+            err(f"{path}: tid {key} ends with unclosed B events {stack} "
+                f"(every begin needs a matching end)")
+    for key in sorted(used_tids - named_tids):
+        err(f"{path}: tid {key} carries events but has no thread_name "
+            f"metadata")
+
+    # X proper nesting per track: sweep spans sorted by (start, -end); each
+    # span must be contained by or disjoint from every enclosing span.
+    for key, spans in sorted(x_spans.items()):
+        stack = []                           # (start, end, name) enclosing
+        for start, end, name in sorted(spans, key=lambda s: (s[0], -s[1])):
+            while stack and stack[-1][1] <= start:
+                stack.pop()
+            if stack and end > stack[-1][1]:
+                err(f"{path}: span {name!r} [{start:.1f},{end:.1f}] on tid "
+                    f"{key} partially overlaps {stack[-1][2]!r} "
+                    f"[{stack[-1][0]:.1f},{stack[-1][1]:.1f}]")
+                continue
+            stack.append((start, end, name))
+    return len(events)
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text format
+# ---------------------------------------------------------------------------
+
+def _parse_value(s: str):
+    if s == "+Inf":
+        return math.inf
+    if s == "-Inf":
+        return -math.inf
+    try:
+        return float(s)
+    except ValueError:
+        return None
+
+
+def check_metrics(path: Path) -> int:
+    try:
+        text = path.read_text(encoding="utf-8")
+    except OSError as e:
+        err(f"{path}: unreadable ({e})")
+        return 0
+    types: dict = {}
+    samples = []                             # (name, labels-dict, value)
+    for ln, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in (
+                    "counter", "gauge", "histogram", "summary", "untyped"):
+                err(f"{path}:{ln}: malformed TYPE line {line!r}")
+                continue
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue                         # HELP / comments
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            err(f"{path}:{ln}: unparseable sample line {line!r}")
+            continue
+        value = _parse_value(m.group("value"))
+        if value is None or (value != value):
+            err(f"{path}:{ln}: bad sample value {m.group('value')!r}")
+            continue
+        labels = {}
+        for item in filter(None, (m.group("labels") or "").split(",")):
+            if "=" not in item:
+                err(f"{path}:{ln}: malformed label {item!r}")
+                continue
+            k, _, v = item.partition("=")
+            labels[k.strip()] = v.strip().strip('"')
+        samples.append((m.group("name"), labels, value))
+
+    by_name = defaultdict(list)
+    for name, labels, value in samples:
+        base = re.sub(r"_(bucket|sum|count)$", "", name) \
+            if re.search(r"_(bucket|sum|count)$", name) else name
+        owner = base if base in types else name
+        if owner not in types:
+            err(f"{path}: sample {name!r} has no # TYPE block")
+            continue
+        by_name[owner].append((name, labels, value))
+
+    for owner, rows in sorted(by_name.items()):
+        if types.get(owner) != "histogram":
+            continue
+        buckets = sorted(
+            ((math.inf if r[1]["le"] == "+Inf" else float(r[1]["le"]), r[2])
+             for r in rows if r[0] == f"{owner}_bucket" and "le" in r[1]),
+            key=lambda t: t[0])
+        count = next((r[2] for r in rows if r[0] == f"{owner}_count"), None)
+        has_sum = any(r[0] == f"{owner}_sum" for r in rows)
+        if not buckets or buckets[-1][0] != math.inf:
+            err(f"{path}: histogram {owner} missing +Inf bucket")
+            continue
+        if count is None or not has_sum:
+            err(f"{path}: histogram {owner} missing _count or _sum")
+            continue
+        cum = [c for _, c in buckets]
+        if any(b > a for a, b in zip(cum[1:], cum)):
+            err(f"{path}: histogram {owner} buckets not cumulative: {cum}")
+        if buckets[-1][1] != count:
+            err(f"{path}: histogram {owner} +Inf bucket {buckets[-1][1]} "
+                f"!= _count {count}")
+    return len(samples)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON to validate")
+    ap.add_argument("--metrics", default="",
+                    help="also validate this Prometheus text-format file")
+    args = ap.parse_args(argv)
+
+    ERRORS.clear()                           # fresh verdict per invocation
+    n_events = check_trace(Path(args.trace))
+    summary = f"{args.trace}: {n_events} events"
+    if args.metrics:
+        n_samples = check_metrics(Path(args.metrics))
+        summary += f"; {args.metrics}: {n_samples} samples"
+    if ERRORS:
+        print(f"{len(ERRORS)} violation(s) — {summary}")
+        return 1
+    print(f"OK — {summary}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
