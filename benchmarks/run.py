@@ -289,6 +289,37 @@ def serving_workload(rate: float, vocab_size: int = 128, n: int = 12,
     return reqs
 
 
+def shared_prefix_workload(vocab_size: int = 128, n: int = 10,
+                           shared: int = 64, max_suffix: int = 4,
+                           seed: int = 17, sample_seed: int = 2000,
+                           temperature: float = 0.0):
+    """Template traffic: 90% of the requests share a ``shared``-token system
+    prefix (the miniature stand-in for the 512-token system prompts of real
+    template-heavy serving) followed by a short unique suffix; one request
+    (uid 5) carries an unrelated prompt and must miss.  Request 0 arrives
+    alone and warms the cache; the rest arrive after its prefill has
+    registered the prefix blocks.  Deterministic: two calls with the same
+    arguments return identical requests."""
+    from repro.runtime import serve_loop
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, vocab_size, shared).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        if i == 5:                         # the 10% non-sharer
+            prompt = rng.integers(0, vocab_size, 8).astype(np.int32)
+        else:
+            sfx = rng.integers(0, vocab_size,
+                               int(rng.integers(2, max_suffix + 1))
+                               ).astype(np.int32)
+            prompt = np.concatenate([pre, sfx])
+        reqs.append(serve_loop.Request(
+            uid=i, prompt=prompt,
+            max_new_tokens=int(rng.integers(4, 17)),
+            arrival=0.0 if i == 0 else float(12 + 2 * i),
+            temperature=temperature, top_p=0.9, seed=sample_seed + i))
+    return reqs
+
+
 #: Structured serving rows accumulated by ``serving()`` and written to
 #: ``BENCH_serving.json`` at the repo root (schema in docs/observability.md).
 SERVING_SCHEMA_VERSION = 1
@@ -441,6 +472,55 @@ def serving():
              f"draft_forwards={rep.draft_forwards};"
              f"decoded={rep.decoded_tokens};"
              f"tokens_match_plain={toks == plain_toks}")
+
+    # cross-request prefix caching on template traffic: 90% of requests share
+    # a 64-token system prefix.  The cache-on run must emit the identical
+    # token streams while serving the shared blocks from cache — hit rate
+    # >= 0.8 and strictly lower mean TTFT than the cache-off row (both
+    # asserted: the quantities are deterministic, arrivals are in steps).
+    def run_shared(prefix_cache):
+        scfg = serve_loop.SchedulerConfig(
+            max_slots=4, block_size=8, num_blocks=96, max_new_tokens=16,
+            max_len=96, prefill_bucket=8, prefill_chunk_tokens=8,
+            prefix_cache=prefix_cache)
+        sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+        t0 = time.time()
+        rep = sched.run(shared_prefix_workload(vocab_size=cfg.vocab_size))
+        us = (time.time() - t0) * 1e6 / max(rep.decode_steps, 1)
+        return sched, rep, us
+
+    off_sched, off_rep, off_us = run_shared(False)
+    on_sched, on_rep, on_us = run_shared(True)
+    off_toks = {r.uid: list(r.generated) for r in off_sched.finished}
+    on_toks = {r.uid: list(r.generated) for r in on_sched.finished}
+    match = on_toks == off_toks
+    ttft_win = on_rep.ttft_steps_mean < off_rep.ttft_steps_mean
+    assert match, "prefix cache changed token streams"
+    assert on_rep.prefix_cache_hit_rate >= 0.8, on_rep.prefix_cache_hit_rate
+    assert ttft_win, (on_rep.ttft_steps_mean, off_rep.ttft_steps_mean)
+    json_rows.append(_serving_row(
+        "shared_prefix_off", off_rep, off_us, prefix_cache=False,
+        shared_prefix=64, ttft_steps_mean=round(off_rep.ttft_steps_mean, 2)))
+    json_rows.append(_serving_row(
+        "shared_prefix_on", on_rep, on_us, prefix_cache=True,
+        shared_prefix=64, ttft_steps_mean=round(on_rep.ttft_steps_mean, 2),
+        hit_rate=round(on_rep.prefix_cache_hit_rate, 4),
+        hit_tokens=on_rep.prefix_cache_hit_tokens,
+        cow_copies=on_rep.cow_copies,
+        blocks_retained=on_rep.blocks_retained,
+        tokens_match_off=match, ttft_lower_than_off=ttft_win))
+    emit("serving/shared_prefix_off", off_us,
+         f"ttft_steps={off_rep.ttft_steps_mean:.1f};"
+         f"prefill_chunks={off_rep.prefill_chunks};"
+         f"blocks_hw={off_rep.pool_high_water_blocks}")
+    emit("serving/shared_prefix_on", on_us,
+         f"hit_rate={on_rep.prefix_cache_hit_rate:.2f};"
+         f"hit_tokens={on_rep.prefix_cache_hit_tokens};"
+         f"cow={on_rep.cow_copies};"
+         f"ttft_steps={on_rep.ttft_steps_mean:.1f};"
+         f"prefill_chunks={on_rep.prefill_chunks};"
+         f"blocks_hw={on_rep.pool_high_water_blocks};"
+         f"tokens_match_off={match};ttft_lower_than_off={ttft_win}")
 
     out = write_serving_json(json_rows)
     print(f"wrote {out} ({len(json_rows)} scenario rows, "

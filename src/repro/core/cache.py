@@ -22,10 +22,29 @@ resident registration, and the two eviction mechanisms — recompute (free the
 victim's blocks; the scheduler re-prefills its prefix later) and host
 swap-out (copy the victim's cached streams to host memory and restore them
 block-exactly on re-admission).
+
+Cross-request prefix caching (docs/serving.md §prefix caching)
+--------------------------------------------------------------
+Real traffic shares huge prompt prefixes (system prompts, few-shot
+templates, multi-turn history).  With ``BlockManager(prefix_cache=True)``
+the pool's physical blocks become *shareable*: every block carries a
+refcount, full prompt-token blocks are content-addressed by a chained hash
+(``prefix_block_hashes`` — block ``i``'s key commits to every token before
+it), and an admission-time ``lookup_prefix`` splices already-cached blocks
+into a newcomer's chain instead of re-prefilling them.  Writes go through a
+copy-on-write barrier (``PagedKVPool.make_private``): a resident that would
+write into a block another chain references gets a private copy first, so
+no write is ever visible through another resident's chain.  Retired
+prefixes' blocks (refcount 0) are *retained* in an LRU rather than freed —
+still servable to future lookups, reclaimed oldest-first only when the
+allocator runs dry.  EliteKV's ~75% cache compression multiplies with this
+dedup: the same physical pool holds proportionally more distinct prefixes.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -60,6 +79,124 @@ def cache_ratio(cfg_elite: ModelConfig, cfg_base: ModelConfig) -> float:
 class OutOfBlocks(RuntimeError):
     """Raised when the pool cannot satisfy an allocation (caller may retry
     after retiring sequences, or refuse admission)."""
+
+
+# ---------------------------------------------------------------------------
+# prefix caching: chained block hashes + the content-addressed block cache
+# ---------------------------------------------------------------------------
+
+#: Domain separator — the hash chain's root "parent" digest.  Bump on any
+#: change to the hashing scheme so stale keys can never alias fresh ones.
+_HASH_ROOT = b"elitekv-prefix-v1"
+
+
+def block_hash(parent: bytes, tokens) -> bytes:
+    """Key of one full token block: ``H(parent_hash ‖ block_tokens)``.
+
+    Chaining through ``parent`` makes the key commit to *every* token before
+    the block, not just its own — two prompts sharing block ``i``'s tokens
+    but differing earlier can never collide (parent-hash dependence)."""
+    h = hashlib.sha256(parent)
+    h.update(np.asarray(tokens, np.int32).tobytes())
+    return h.digest()
+
+
+def prefix_block_hashes(tokens, block_size: int) -> List[bytes]:
+    """Chained hashes of every FULL ``block_size``-token block of ``tokens``.
+    A partial tail block has no hash — it is never cached (its content would
+    change as the sequence grows into it)."""
+    toks = np.asarray(tokens, np.int32)
+    out: List[bytes] = []
+    parent = _HASH_ROOT
+    for i in range(len(toks) // block_size):
+        parent = block_hash(parent,
+                            toks[i * block_size:(i + 1) * block_size])
+        out.append(parent)
+    return out
+
+
+class PrefixCache:
+    """Content-addressed map from chained block hashes to physical blocks,
+    with LRU retention of unreferenced entries.
+
+    Owned by a ``BlockManager``; the pool consults it on the block lifecycle
+    edges: a cached block whose refcount drops to 0 is *retained* (moved to
+    the LRU, still servable to lookups) instead of freed, and reclaimed
+    oldest-first only when the allocator runs dry.  A cached block is never
+    rewritten in place: shared blocks copy-on-write, and a sole owner about
+    to rewrite one first ``invalidate``s its claim.
+    """
+
+    def __init__(self):
+        self._by_hash: Dict[bytes, int] = {}          # chain hash → block
+        self._by_block: Dict[int, bytes] = {}         # block → chain hash
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()                 # refcount-0, oldest first
+        self.hits = 0                                 # lookups that shared ≥ 1 block
+        self.misses = 0                               # lookups that shared none
+        self.hit_tokens = 0                           # tokens served from cache
+        self.lookup_tokens = 0                        # tokens presented to lookups
+        self.reclaimed = 0                            # retained blocks evicted
+
+    @property
+    def num_cached(self) -> int:
+        return len(self._by_hash)
+
+    @property
+    def num_retained(self) -> int:
+        return len(self._lru)
+
+    def get(self, h: bytes) -> Optional[int]:
+        return self._by_hash.get(h)
+
+    def is_cached(self, block: int) -> bool:
+        return block in self._by_block
+
+    def claim(self, h: bytes, block: int) -> bool:
+        """Register ``block`` as the physical home of chain hash ``h``.
+        First claim wins — a duplicate hash keeps the existing block (the
+        newcomer's copy stays private and is freed normally)."""
+        if h in self._by_hash or block in self._by_block:
+            return False
+        self._by_hash[h] = block
+        self._by_block[block] = h
+        return True
+
+    def on_ref(self, block: int) -> None:
+        """``block`` gained a reference: it leaves the reclaimable LRU."""
+        self._lru.pop(block, None)
+
+    def retain(self, block: int) -> bool:
+        """``block``'s refcount hit 0.  Returns True when the block is cached
+        and should be kept (appended as most-recently-used); False means the
+        pool frees it normally."""
+        if block not in self._by_block:
+            return False
+        self._lru[block] = None
+        self._lru.move_to_end(block)
+        return True
+
+    def invalidate(self, block: int) -> None:
+        """Drop ``block``'s content claim (sole owner about to rewrite it, or
+        a COW copy superseding it).  The block itself stays wherever it is —
+        owned by its chain, or freed by the caller."""
+        h = self._by_block.pop(block, None)
+        if h is not None:
+            del self._by_hash[h]
+        self._lru.pop(block, None)
+
+    def reclaim(self, n: int) -> List[int]:
+        """Evict up to ``n`` retained blocks, least-recently-used first,
+        dropping their hash claims.  Returns the blocks (now unowned — the
+        caller puts them back on the free list)."""
+        out: List[int] = []
+        while len(out) < n and self._lru:
+            block, _ = self._lru.popitem(last=False)
+            h = self._by_block.pop(block)
+            del self._by_hash[h]
+            self.reclaimed += 1
+            out.append(block)
+        return out
 
 
 class BlockAllocator:
@@ -106,6 +243,9 @@ class PoolStats:
     allocated_tokens: int   # blocks_in_use * block_size (internal fragmentation)
     live_bytes: int
     allocated_bytes: int
+    blocks_shared: int = 0     # blocks referenced by more than one chain
+    blocks_retained: int = 0   # refcount-0 prefix-cache blocks (reclaimable)
+    cow_copies: int = 0        # lifetime copy-on-write block copies
 
 
 class PagedKVPool:
@@ -133,6 +273,9 @@ class PagedKVPool:
         self.allocator = BlockAllocator(num_blocks)
         self._tables: Dict[int, List[int]] = {}   # seq_id → block chain
         self._lengths: Dict[int, int] = {}        # seq_id → live token count
+        self._refcount: Dict[int, int] = {}       # block → referencing chains
+        self.prefix: Optional[PrefixCache] = None  # set by BlockManager
+        self.cow_copies = 0                       # lifetime copy-on-write count
         e = cfg.elitekv
         n_super = cfg.num_layers // cfg.block_period
         n_slots = num_blocks * block_size
@@ -149,6 +292,46 @@ class PagedKVPool:
 
         self.pages = {f"p{p}": _streams() for p in range(cfg.block_period)}
 
+    # -- allocation plumbing (prefix-cache aware) ---------------------------
+    def _alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` blocks, reclaiming LRU-retained prefix-cache blocks
+        (oldest first) when the free list alone cannot cover the request."""
+        short = n - self.allocator.num_free
+        if short > 0 and self.prefix is not None:
+            evicted = self.prefix.reclaim(short)
+            if evicted:
+                self.allocator.free(evicted)
+                self.trace.instant("free", track="pool", cat="pool", seq=-1,
+                                   blocks=evicted, reason="reclaim")
+        got = self.allocator.alloc(n)       # raises OutOfBlocks if still short
+        for b in got:
+            self._refcount[b] = 1
+        return got
+
+    def _release_blocks(self, blocks: Sequence[int], seq_id: int,
+                        reason: str) -> None:
+        """Drop one reference per block.  A block reaching refcount 0 either
+        returns to the free list or — when it backs a cached prefix — is
+        retained reclaimable in the prefix cache's LRU."""
+        freed: List[int] = []
+        retained: List[int] = []
+        for b in blocks:
+            self._refcount[b] -= 1
+            if self._refcount[b] > 0:
+                continue                    # another chain still reads it
+            del self._refcount[b]
+            if self.prefix is not None and self.prefix.retain(b):
+                retained.append(b)
+            else:
+                freed.append(b)
+        if freed:
+            self.allocator.free(freed)
+            self.trace.instant("free", track="pool", cat="pool", seq=seq_id,
+                               blocks=freed, reason=reason)
+        if retained:
+            self.trace.instant("retain", track="pool", cat="cache",
+                               seq=seq_id, blocks=retained)
+
     # -- sequence lifecycle -------------------------------------------------
     def ensure_capacity(self, seq_id: int, length: int) -> None:
         """Grow ``seq_id``'s block chain to hold ``length`` tokens (allocates
@@ -156,20 +339,71 @@ class PagedKVPool:
         table = self._tables.setdefault(seq_id, [])
         need = -(-length // self.block_size) - len(table)
         if need > 0:
-            got = self.allocator.alloc(need)
+            got = self._alloc(need)
             table.extend(got)
             self.trace.instant("alloc", track="pool", cat="pool", seq=seq_id,
                                blocks=got, length=length)
         self._lengths[seq_id] = max(self._lengths.get(seq_id, 0), length)
 
+    def share_prefix(self, seq_id: int, blocks: Sequence[int]) -> None:
+        """Splice already-cached ``blocks`` into ``seq_id``'s (empty) chain
+        as its head: each gains a reference instead of being re-prefilled.
+        The chain's length becomes exactly the shared coverage."""
+        table = self._tables.setdefault(seq_id, [])
+        assert not table and not self._lengths.get(seq_id, 0), \
+            (seq_id, "prefix sharing requires a fresh chain")
+        for b in blocks:
+            self._refcount[b] = self._refcount.get(b, 0) + 1
+            if self.prefix is not None:
+                self.prefix.on_ref(b)
+        table.extend(blocks)
+        self._lengths[seq_id] = len(blocks) * self.block_size
+        if blocks:
+            self.trace.instant("share", track="pool", cat="cache",
+                               seq=seq_id, blocks=list(blocks))
+
+    def make_private(self, seq_id: int, start: int, end: int) -> None:
+        """Copy-on-write barrier: before ``seq_id`` writes token positions
+        ``[start, end)``, give it exclusive ownership of every covered block.
+        A block another chain references is copied device-side into a fresh
+        block (the writer's chain repoints; readers keep the original); a
+        sole-owner block that backs a cached prefix just drops its content
+        claim (no copy needed — nobody else can read it)."""
+        if end <= start:
+            return
+        table = self._tables.get(seq_id, [])
+        bs = self.block_size
+        for bi in range(start // bs, min(-(-end // bs), len(table))):
+            b = table[bi]
+            if self._refcount.get(b, 0) > 1:
+                new = self._alloc(1)[0]
+                src = np.arange(b * bs, (b + 1) * bs)
+                dst = np.arange(new * bs, (new + 1) * bs)
+                for p_key, layer in self.pages.items():
+                    self.pages[p_key] = {
+                        name: arr.at[:, dst].set(arr[:, src])
+                        for name, arr in layer.items()}
+                self._refcount[b] -= 1
+                table[bi] = new
+                self.cow_copies += 1
+                self.trace.instant("cow", track="pool", cat="cache",
+                                   seq=seq_id, block=b, copy=new)
+            elif self.prefix is not None and self.prefix.is_cached(b):
+                self.prefix.invalidate(b)   # sole owner rewrites in place
+
     def can_fit(self, extra_tokens: int) -> bool:
-        return self.allocator.num_free * self.block_size >= extra_tokens
+        avail = self.allocator.num_free + \
+            (self.prefix.num_retained if self.prefix is not None else 0)
+        return avail * self.block_size >= extra_tokens
 
     def truncate(self, seq_id: int, length: int) -> None:
-        """Shrink ``seq_id`` to ``length`` tokens, freeing tail blocks the
+        """Shrink ``seq_id`` to ``length`` tokens, releasing tail blocks the
         shorter chain no longer covers (speculative decode rolls rejected
         verify-window tokens back through here — pages are never rewritten,
         the stale slots are simply re-extended over by later growth).
+        A released block still referenced by another chain is merely
+        un-linked, never freed or rolled back; the next write into a kept
+        block that is still shared goes through ``make_private`` first.
         ``length`` must not exceed the current length; 0 keeps the (empty)
         chain registered."""
         assert length >= 0, length
@@ -181,25 +415,25 @@ class PagedKVPool:
         table = self._tables.get(seq_id, [])
         keep = -(-length // self.block_size)
         if keep < len(table):
-            freed = table[keep:]
-            self.allocator.free(freed)
+            dropped = table[keep:]
             del table[keep:]
-            self.trace.instant("free", track="pool", cat="pool", seq=seq_id,
-                               blocks=freed, reason="truncate", length=length)
+            self._release_blocks(dropped, seq_id, reason="truncate")
         self._lengths[seq_id] = length
 
     def free_seq(self, seq_id: int) -> None:
         blocks = self._tables.pop(seq_id, [])
         if blocks:
-            self.trace.instant("free", track="pool", cat="pool", seq=seq_id,
-                               blocks=blocks, reason="release")
-        self.allocator.free(blocks)
+            self._release_blocks(blocks, seq_id, reason="release")
         self._lengths.pop(seq_id, None)
 
     def reset(self) -> None:
         self.allocator.reset()
         self._tables.clear()
         self._lengths.clear()
+        self._refcount.clear()
+        self.cow_copies = 0
+        if self.prefix is not None:
+            self.prefix = PrefixCache()
 
     def length(self, seq_id: int) -> int:
         return self._lengths.get(seq_id, 0)
@@ -273,7 +507,11 @@ class PagedKVPool:
             total_allocs=self.allocator.total_allocs,
             live_tokens=live, allocated_tokens=alloc_tok,
             live_bytes=live * fpt * itemsize,
-            allocated_bytes=alloc_tok * fpt * itemsize)
+            allocated_bytes=alloc_tok * fpt * itemsize,
+            blocks_shared=sum(1 for c in self._refcount.values() if c > 1),
+            blocks_retained=(self.prefix.num_retained
+                             if self.prefix is not None else 0),
+            cow_copies=self.cow_copies)
 
 
 @dataclasses.dataclass
@@ -314,17 +552,88 @@ class BlockManager:
     * ``preempt_swap_out`` / ``swap_in`` — copy the victim's live tokens to
       host memory, free the blocks, and scatter the copy back into a fresh
       chain on re-admission.  Costs PCIe traffic instead of FLOPs.
+
+    With ``prefix_cache=True`` the manager additionally runs the
+    cross-request prefix cache (``PrefixCache``): ``lookup_prefix`` splices
+    cached full prompt blocks into a newcomer's chain, ``register_prefix``
+    claims a resident's freshly prefilled full blocks for future lookups,
+    and ``prepare_write`` is the copy-on-write barrier callers invoke before
+    scattering into a chain.  Eviction, preemption and ``truncate`` all
+    respect refcounts — a block another chain references is never freed or
+    rolled back.
     """
 
-    def __init__(self, pool: PagedKVPool, policy: str = "preempt"):
+    def __init__(self, pool: PagedKVPool, policy: str = "preempt",
+                 prefix_cache: bool = False):
         assert policy in ("preempt", "watermark"), policy
         self.pool = pool
         self.policy = policy
+        if prefix_cache and pool.prefix is None:
+            pool.prefix = PrefixCache()
         self._resident_worst: Dict[int, int] = {}   # seq_id → worst-case blocks
         self.preemptions = 0
         self.swap_outs = 0
         self.swap_ins = 0
         self.swapped_bytes = 0                      # lifetime host-swap traffic
+
+    @property
+    def prefix(self) -> Optional[PrefixCache]:
+        return self.pool.prefix
+
+    # -- prefix cache (cross-request block sharing) -------------------------
+    def lookup_prefix(self, seq_id: int, tokens) -> int:
+        """Admission-time cache probe: share the longest cached chain of full
+        ``tokens`` blocks into ``seq_id``'s fresh chain and return the number
+        of tokens covered (0 on a miss).  The hit is capped one token short
+        of ``len(tokens)`` — at least the final prompt token is always
+        re-prefilled so the forward produces the logits row the first
+        sampled token comes from."""
+        pc = self.prefix
+        if pc is None or len(tokens) == 0:
+            return 0
+        bs = self.pool.block_size
+        pc.lookup_tokens += len(tokens)
+        cap = (len(tokens) - 1) // bs       # never cover the whole prompt
+        blocks: List[int] = []
+        for h in prefix_block_hashes(tokens, bs)[:cap]:
+            b = pc.get(h)
+            if b is None:
+                break
+            blocks.append(b)
+        if not blocks:
+            pc.misses += 1
+            return 0
+        self.pool.share_prefix(seq_id, blocks)
+        pc.hits += 1
+        pc.hit_tokens += len(blocks) * bs
+        return len(blocks) * bs
+
+    def register_prefix(self, seq_id: int, tokens) -> int:
+        """Claim ``seq_id``'s fully-written prompt blocks for future lookups:
+        every full block of ``tokens`` the chain already covers gets its
+        chain hash registered (first claim wins; a hash someone else already
+        owns leaves this chain's copy private).  Returns new claims made."""
+        pc = self.prefix
+        if pc is None:
+            return 0
+        bs = self.pool.block_size
+        table = self.pool.block_table(seq_id)
+        n_full = min(len(tokens) // bs, self.pool.length(seq_id) // bs,
+                     len(table))
+        claimed = 0
+        for i, h in enumerate(prefix_block_hashes(tokens, bs)[:n_full]):
+            if pc.claim(h, table[i]):
+                claimed += 1
+        if claimed:
+            self.pool.trace.instant("prefix_register", track="pool",
+                                    cat="cache", seq=seq_id, blocks=claimed)
+        return claimed
+
+    def prepare_write(self, seq_id: int, start: int, end: int) -> None:
+        """Copy-on-write barrier for an upcoming scatter into positions
+        ``[start, end)`` of ``seq_id``'s chain (no-op without sharing)."""
+        if self.prefix is not None:
+            self.pool.make_private(seq_id, start, end)
 
     # -- admission ----------------------------------------------------------
     @property
@@ -335,8 +644,11 @@ class BlockManager:
 
     def can_admit(self, first_alloc_tokens: int, worst_case_blocks: int) -> bool:
         if self.policy == "watermark":
-            return (self.pool.allocator.num_free - self.reserved_blocks
-                    >= worst_case_blocks)
+            # LRU-retained prefix blocks count as free: growth reclaims them
+            # on demand, so the reservation guarantee still holds
+            retained = self.prefix.num_retained if self.prefix else 0
+            return (self.pool.allocator.num_free + retained
+                    - self.reserved_blocks >= worst_case_blocks)
         return self.pool.can_fit(first_alloc_tokens)
 
     def register(self, seq_id: int, worst_case_blocks: int) -> None:
@@ -356,9 +668,12 @@ class BlockManager:
 
     def truncate(self, seq_id: int, length: int) -> None:
         """Roll ``seq_id`` back to ``length`` tokens (rejected speculative
-        verify-window tail): tail blocks return to the free list immediately,
-        residency is kept — the watermark reservation grows back by exactly
-        the freed blocks, so both admission policies stay conserved."""
+        verify-window tail): exclusively-owned tail blocks return to the free
+        list immediately, while a tail block another chain still references
+        is only un-linked (its content is never rolled back under the other
+        resident); residency is kept — the watermark reservation grows back
+        by exactly the released blocks, so both admission policies stay
+        conserved."""
         self.pool.truncate(seq_id, length)
 
     # -- eviction -----------------------------------------------------------

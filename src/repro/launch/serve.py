@@ -33,7 +33,10 @@ decode to self-speculative draft/verify macro-steps (``--draft-rank R``
 picks the rank-truncated draft; 0 = full-rank): each step proposes up to K
 tokens per resident with the cheap draft and verifies them in one
 full-model forward, advancing ``1 + accepted`` tokens per verify — greedy
-streams stay identical to plain decode.  The run ends by printing
+streams stay identical to plain decode.  ``--prefix-cache`` shares prompt
+blocks across requests (content-addressed, copy-on-write — docs/serving.md);
+``--shared-prefix N`` prepends a common N-token system prefix to every
+stream prompt so the cache has something to hit.  The run ends by printing
 the scheduler metrics line:
 
     completed / decode steps / decoded tokens / tok/s — throughput
@@ -90,24 +93,29 @@ def serve_stream(params, buffers, cfg, args):
         max_slots=args.max_slots, block_size=args.block_size,
         num_blocks=args.num_blocks, eos_id=args.eos_id,
         max_new_tokens=args.new_tokens,
-        max_len=args.prompt_len + args.new_tokens + 1,
+        max_len=args.shared_prefix + args.prompt_len + args.new_tokens + 1,
         prefill_chunk_tokens=args.prefill_chunk,
         prefill_batch_lanes=args.prefill_lanes,
         admission=args.admission, eviction=args.eviction,
-        speculate_k=args.speculate, draft_rank=args.draft_rank)
+        speculate_k=args.speculate, draft_rank=args.draft_rank,
+        prefix_cache=args.prefix_cache)
     sched = serve_loop.Scheduler(params, buffers, cfg, scfg, tracer=tracer,
                                  metrics=REGISTRY)
     p_lo = min(4, args.prompt_len)          # sampling floors, valid even for
     n_lo = min(4, args.new_tokens)          # --prompt-len/--new-tokens < 4
+    shared = (rng.integers(0, cfg.vocab_size, args.shared_prefix)
+              .astype(np.int32) if args.shared_prefix else None)
     t = 0.0
     reqs = []
     for i in range(args.requests):
         t += rng.exponential(1.0 / args.rate)
+        prompt = rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(p_lo, args.prompt_len + 1))
+                              ).astype(np.int32)
+        if shared is not None:
+            prompt = np.concatenate([shared, prompt])
         reqs.append(serve_loop.Request(
-            uid=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                int(rng.integers(p_lo, args.prompt_len + 1))
-                                ).astype(np.int32),
+            uid=i, prompt=prompt,
             max_new_tokens=int(rng.integers(n_lo, args.new_tokens + 1)),
             arrival=t,
             temperature=args.temperature, top_p=args.top_p,
@@ -128,6 +136,13 @@ def serve_stream(params, buffers, cfg, args):
               f"mean {report.mean_accepted:.2f}/window) over "
               f"{report.draft_forwards} draft + {report.decode_steps} verify "
               f"forwards -> {report.tokens_per_forward:.2f} tokens/forward")
+    if scfg.prefix_cache:
+        print(f"prefix cache: hit_rate={report.prefix_cache_hit_rate:.2f} "
+              f"({report.prefix_cache_hit_tokens} prompt tokens served from "
+              f"cache across {report.prefix_cache_hits} hits / "
+              f"{report.prefix_cache_misses} misses), "
+              f"cow_copies={report.cow_copies}, "
+              f"retained_blocks={report.blocks_retained}")
     if report.preemptions:
         print(f"preemption [{scfg.eviction}]: {report.preemptions} evictions "
               f"across {report.preempted_requests} requests "
@@ -189,6 +204,13 @@ def main(argv=None):
                     help="preempt: admit on demand, evict youngest on "
                          "OutOfBlocks; watermark: legacy worst-case "
                          "reservation (never preempts)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix blocks across requests "
+                         "(content-addressed cache, copy-on-write; "
+                         "docs/serving.md)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common N-token system prefix to every "
+                         "stream prompt (exercises --prefix-cache hits)")
     ap.add_argument("--eviction", choices=("recompute", "swap"),
                     default="recompute",
                     help="preemption mechanism: recompute the evicted prefix "

@@ -57,6 +57,20 @@ token.  ``admission="watermark"`` keeps the legacy reservation policy
 (worst-case remaining blocks of every resident held back, so growth can
 never fail) for comparison runs — it trades occupancy for never preempting.
 
+Prefix caching (``prefix_cache=True``, docs/serving.md): the pool's blocks
+become shareable across requests.  At admission the scheduler probes the
+``BlockManager``'s content-addressed prefix cache with the request's prompt
+(chained hashes of full token blocks); cached blocks are spliced into the
+newcomer's chain and prefill *skips every fully-covered chunk*, resuming
+chunked-prefill attention at the first miss.  Freshly prefilled full prompt
+blocks are registered after every chunk, so a long shared system prompt
+warms the cache for requests arriving mid-prefill.  All writes go through a
+copy-on-write barrier (``prepare_write`` inside ``_grow_or_preempt``), so
+the token streams are invariant: a cache-on run emits exactly the cache-off
+tokens (greedy and sampled, under preemption and speculative decode —
+tests/test_prefix_cache.py pins the wall).  Retired prefixes stay retained
+in an LRU until the allocator actually needs their blocks.
+
 Observability (docs/observability.md): the scheduler accepts a
 ``repro.obs.trace.Tracer`` and a ``repro.obs.metrics.MetricsRegistry``.  Every
 step is decomposed into host-observable **phases** (``PHASES``) — prefill /
@@ -197,6 +211,8 @@ class Request:
     #   ^ len(generated) at each preemption (0 = preempted mid-prefill)
     spec_proposed: int = 0                # draft tokens proposed for this req
     spec_accepted: int = 0                # draft tokens that survived verify
+    prefix_hit_tokens: int = 0            # prompt tokens served from the
+                                          # prefix cache (Σ over re-admissions)
     submit_wall: float = 0.0
     first_token_wall: float = 0.0
     first_token_step: int = -1
@@ -229,6 +245,8 @@ class SchedulerConfig:
                                           # model (0 or >= d_ckv → full rank)
     admission: str = "preempt"            # "preempt" | "watermark" (legacy)
     eviction: str = "recompute"           # "recompute" | "swap" (host swap-out)
+    prefix_cache: bool = False            # share prompt-prefix blocks across
+                                          # requests (COW on divergence)
     use_kernel: bool = True               # Pallas paged kernel on TPU
     cache_dtype: Any = jnp.float32
 
@@ -423,6 +441,14 @@ class ServeReport:
                                           # forward (plain ≡ 1.0; spec =
                                           # 1 + mean_accepted)
     acceptance_by_bucket: Dict[str, float] = dataclasses.field(default_factory=dict)
+    prefix_cache: bool = False            # run shared prompt blocks
+    prefix_cache_hits: int = 0            # admissions that reused cached blocks
+    prefix_cache_misses: int = 0          # admissions finding nothing cached
+    prefix_cache_hit_tokens: int = 0      # prompt tokens skipped at prefill
+    prefix_cache_hit_rate: float = 0.0    # hit_tokens / tokens presented to
+                                          # lookups (per-token, not per-request)
+    cow_copies: int = 0                   # copy-on-write block privatizations
+    blocks_retained: int = 0              # zero-ref cached blocks at run end
     phase_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
     #   ^ wall ms per step phase over the whole run (keys == PHASES; a phase
     #     that never ran reports exactly 0.0).  ``other`` is the residual, so
@@ -448,6 +474,11 @@ class ServeReport:
             spec = (f" spec[k={self.speculate_k},r={self.draft_rank}] "
                     f"acc={self.acceptance_rate:.2f} "
                     f"tok/fwd={self.tokens_per_forward:.2f}")
+        pc = ""
+        if self.prefix_cache:
+            pc = (f" pc[hit={self.prefix_cache_hit_rate:.2f} "
+                  f"tok={self.prefix_cache_hit_tokens} "
+                  f"cow={self.cow_copies}]")
         return (f"completed={self.completed} steps={self.decode_steps} "
                 f"decoded={self.decoded_tokens} tok/s={self.tok_per_s:.1f} "
                 f"ttft_steps={self.ttft_steps_mean:.1f}{bucket} "
@@ -459,7 +490,7 @@ class ServeReport:
                 f"occ={self.mean_occupancy:.2f} [{self.admission}] "
                 f"preempt={self.preemptions}"
                 f"(swap {self.swap_outs}/{self.swap_ins}) "
-                f"prefill_batch={self.mean_prefill_batch:.1f}{spec}")
+                f"prefill_batch={self.mean_prefill_batch:.1f}{spec}{pc}")
 
 
 class Scheduler:
@@ -475,7 +506,8 @@ class Scheduler:
         self.metrics = metrics or MetricsRegistry()
         self.pool = PagedKVPool(cfg, scfg.num_blocks, scfg.block_size,
                                 dtype=scfg.cache_dtype, tracer=self.trace)
-        self.bm = BlockManager(self.pool, policy=scfg.admission)
+        self.bm = BlockManager(self.pool, policy=scfg.admission,
+                               prefix_cache=scfg.prefix_cache)
         self.slots: List[Optional[Request]] = [None] * scfg.max_slots
         self.waiting: collections.deque = collections.deque()
         self.finished: List[Request] = []
@@ -525,6 +557,27 @@ class Scheduler:
         self._m_phase = {p: m.counter(f"serve_phase_{p}_ms_total",
                                       f"total wall ms spent in the {p} phase")
                          for p in PHASES}
+        # prefix-cache family (always registered; zero-valued when the cache
+        # is off so exported metric sets stay schema-stable for check_trace)
+        self._m_pc_hits = m.counter(
+            "serve_prefix_cache_hits_total",
+            "admissions that reused >=1 cached prefix block")
+        self._m_pc_misses = m.counter(
+            "serve_prefix_cache_misses_total",
+            "admissions whose prompt missed the prefix cache")
+        self._m_pc_hit_tokens = m.counter(
+            "serve_prefix_cache_hit_tokens_total",
+            "prompt tokens served from cached blocks instead of prefill")
+        self._m_pc_cow = m.counter(
+            "serve_prefix_cache_cow_total",
+            "copy-on-write block copies (write into a shared block)")
+        self._m_pc_retained = m.gauge(
+            "serve_prefix_cache_blocks_retained",
+            "zero-refcount cached blocks held in the reclaimable LRU")
+        self._m_pc_cached = m.gauge(
+            "serve_prefix_cache_blocks_cached",
+            "physical blocks with a registered prefix-hash claim")
+        self._cow_synced = 0                # pool.cow_copies already metered
         # the draft shares params unless a real rank truncation is requested
         self.draft_params = (
             lm.make_draft_params(params, cfg, scfg.draft_rank)
@@ -604,6 +657,11 @@ class Scheduler:
                      f"{self.pool.num_blocks} blocks used, "
                      f"{self.pool.allocator.num_free} free, "
                      f"block_size={self.pool.block_size}")
+        if self.bm.prefix is not None:
+            pc = self.bm.prefix
+            lines.append(f"prefix cache: {pc.num_cached} cached, "
+                         f"{pc.num_retained} retained, hits={pc.hits} "
+                         f"misses={pc.misses} cow={self.pool.cow_copies}")
         for i, r in enumerate(self.slots):
             if r is None:
                 lines.append(f"slot{i}: empty")
@@ -675,12 +733,19 @@ class Scheduler:
     def _admit(self, slot: int, req: Request) -> None:
         """Claim a slot (restoring a swapped-out prefix if there is one).
         Block allocation otherwise happens on demand, chunk by chunk, in
-        ``_prefill_work`` — and prefill itself is interleaved with decode."""
+        ``_prefill_work`` — and prefill itself is interleaved with decode.
+        With the prefix cache on, a fresh (non-swapped) admission first
+        probes the cache with its prefill source: hit blocks splice into the
+        chain and ``prefill_pos`` jumps past them, so prefill resumes at the
+        first miss (the final prompt token is never cache-served — its
+        logits row seeds the first sampled token)."""
         if req.swapped is not None:
             with self._phase("swap", direction="in", uid=req.uid):
                 self.bm.swap_in(req.uid, req.swapped)
             req.swapped = None
             self._m_swap_ins.inc()
+        elif self.bm.prefix is not None and req.prefill_pos == 0:
+            self._lookup_prefix(req)
         self.bm.register(req.uid, self._worst_case_blocks(req))
         self.slots[slot] = req
         self.trace.begin(f"req{req.uid}", track=f"slot{slot}", cat="request",
@@ -688,6 +753,27 @@ class Scheduler:
         self.trace.instant("admit", track="scheduler", cat="request",
                            uid=req.uid, slot=slot,
                            queued_steps=self.t - req.arrival)
+
+    def _lookup_prefix(self, req: Request) -> None:
+        """Probe the prefix cache with the request's prefill source and
+        splice any hit blocks into its (fresh) chain.  After a recompute
+        preemption the source is prompt + generated, so a re-admission can
+        hit its *own* earlier blocks (retained at eviction) and skip most of
+        the recompute prefill."""
+        src = req.prefill_source()
+        hit = self.bm.lookup_prefix(req.uid, src)
+        if hit:
+            req.prefill_pos = hit
+            req.prefix_hit_tokens += hit
+            self._m_pc_hits.inc()
+            self._m_pc_hit_tokens.inc(hit)
+            self.trace.instant("prefix_hit", track="scheduler", cat="cache",
+                               uid=req.uid, tokens=hit,
+                               blocks=hit // self.scfg.block_size)
+        else:
+            self._m_pc_misses.inc()
+            self.trace.instant("prefix_miss", track="scheduler", cat="cache",
+                               uid=req.uid, tokens=len(src))
 
     # -- preemption ---------------------------------------------------------
     def _decode_ready(self, req: Request) -> bool:
@@ -739,15 +825,24 @@ class Scheduler:
         self.slots[slot] = None
         self.waiting.appendleft(req)
 
-    def _grow_or_preempt(self, req: Request, length: int) -> bool:
+    def _grow_or_preempt(self, req: Request, length: int,
+                         write_from: Optional[int] = None) -> bool:
         """Grow ``req``'s chain to ``length`` tokens, preempting the youngest
         resident until the allocation fits.  Returns False iff ``req`` itself
         was the youngest and got evicted (caller drops it this step).
         Terminates: every retry removes one resident, and a lone resident's
-        worst case fits the pool (enforced at ``submit``)."""
+        worst case fits the pool (enforced at ``submit``).
+
+        ``write_from`` is the copy-on-write barrier: the caller is about to
+        write pool positions ``[write_from, length)``, so any *shared* block
+        covering that range is privatized first (``BlockManager.
+        prepare_write``).  The COW copy itself allocates, so it lives inside
+        the same OutOfBlocks-preempt retry loop as the growth."""
         while True:
             try:
                 self.bm.grow(req.uid, length)
+                if write_from is not None:
+                    self.bm.prepare_write(req.uid, write_from, length)
                 return True
             except OutOfBlocks:
                 slot = self._youngest_slot()
@@ -800,28 +895,45 @@ class Scheduler:
                                cat="request", uid=req.uid, step=self.t)
 
     def _run_oneshot(self, slot: int, req: Request) -> None:
-        """Whole-source causal prefill in one call, padded to the bucket."""
+        """Whole-source causal prefill in one call, padded to the bucket.
+        A prefix-cache hit leaves ``prefill_pos > 0``: only the uncovered
+        tail runs, as one resumed chunk attending to the cached prefix
+        through the block table (the chunked machinery's ``chunk_start`` /
+        ``prefix_lens`` path with a single lane)."""
         src = req.prefill_source()
         sp = len(src)
-        if not self._grow_or_preempt(req, sp):
+        pos = req.prefill_pos
+        if not self._grow_or_preempt(req, sp, write_from=pos):
             return                          # req evicted itself — retry later
-        pad = -(-sp // self.scfg.prefill_bucket) * self.scfg.prefill_bucket
+        n = sp - pos
+        pad = -(-n // self.scfg.prefill_bucket) * self.scfg.prefill_bucket
         tokens = np.zeros((1, pad), np.int32)
-        tokens[0, :sp] = src
-        sm = self.pool.prefill_slot_mapping(req.uid, 0, sp, pad)[None]
-        with self._phase("prefill", lanes=1, tokens=sp):
-            logits, self.pool.pages = self._prefill(
-                self.params, self.buffers, jnp.asarray(tokens),
-                self.pool.pages, jnp.asarray(sm))
+        tokens[0, :n] = src[pos:]
+        sm = self.pool.prefill_slot_mapping(req.uid, pos, n, pad)[None]
+        with self._phase("prefill", lanes=1, tokens=n):
+            if pos == 0:
+                logits, self.pool.pages = self._prefill(
+                    self.params, self.buffers, jnp.asarray(tokens),
+                    self.pool.pages, jnp.asarray(sm))
+            else:
+                bt = self.pool.block_table_array(
+                    [req.uid], self.scfg.max_blocks_per_seq)
+                starts = np.asarray([pos], np.int32)
+                logits, self.pool.pages = self._prefill_batch(
+                    self.params, self.buffers, jnp.asarray(tokens),
+                    self.pool.pages, jnp.asarray(sm), jnp.asarray(starts),
+                    jnp.asarray(bt), jnp.asarray(starts))
             jax.block_until_ready(logits)
         self.trace.instant("prefill_chunk", track=f"slot{slot}",
-                           cat="request", uid=req.uid, start=0, n=sp)
-        self._m_prefill_tokens.inc(sp)
+                           cat="request", uid=req.uid, start=pos, n=n)
+        self._m_prefill_tokens.inc(n)
         req.prefill_pos = sp
+        if self.bm.prefix is not None:
+            self.bm.register_prefix(req.uid, src[:sp])
         self.prefill_chunks += 1
         self._prefill_lanes_total += 1
         with self._phase("sample"):
-            self._sample_prefill_token(req, logits[0, sp - 1])
+            self._sample_prefill_token(req, logits[0, n - 1])
         self._maybe_finish(slot, req.generated[-1])
 
     def _prefill_work(self) -> None:
@@ -857,7 +969,8 @@ class Scheduler:
             if req is None:                 # evicted by an earlier growth
                 continue
             n = min(chunk, len(req.prefill_source()) - req.prefill_pos)
-            if self._grow_or_preempt(req, req.prefill_pos + n):
+            if self._grow_or_preempt(req, req.prefill_pos + n,
+                                     write_from=req.prefill_pos):
                 selected.append((slot, req, req.prefill_pos, n))
         selected = [(s, r, st, n) for s, r, st, n in selected
                     if self.slots[s] is r]  # drop lanes evicted after selection
@@ -888,6 +1001,11 @@ class Scheduler:
             self.trace.instant("prefill_chunk", track=f"slot{slot}",
                                cat="request", uid=req.uid, start=start, n=n)
             req.prefill_pos = start + n
+            if self.bm.prefix is not None:
+                # register freshly completed full prompt blocks after every
+                # chunk, so requests arriving mid-prefill can already hit
+                self.bm.register_prefix(
+                    req.uid, req.prefill_source()[:req.prefill_pos])
             if req.prefill_pos >= len(req.prefill_source()):
                 with self._phase("sample"):
                     self._sample_prefill_token(req, logits[lane, n - 1])
@@ -926,6 +1044,14 @@ class Scheduler:
         self.trace.counter("pool_blocks_used", self.pool.allocator.num_used,
                            track="pool")
         self.trace.counter("slots_occupied", len(occupied), track="scheduler")
+        if self.bm.prefix is not None:
+            if self.pool.cow_copies > self._cow_synced:
+                self._m_pc_cow.inc(self.pool.cow_copies - self._cow_synced)
+                self._cow_synced = self.pool.cow_copies
+            self._m_pc_retained.set(self.bm.prefix.num_retained)
+            self._m_pc_cached.set(self.bm.prefix.num_cached)
+            self.trace.counter("prefix_blocks_retained",
+                               self.bm.prefix.num_retained, track="pool")
         # decode lanes: slots whose prefill source is fully cached, oldest
         # first — chain growth may preempt the youngest residents (who then
         # sit out this step in the queue).
@@ -952,7 +1078,7 @@ class Scheduler:
             if req is None:
                 continue                    # evicted by an older lane's growth
             cur = self.pool.length(req.uid)
-            if self._grow_or_preempt(req, cur + 1):
+            if self._grow_or_preempt(req, cur + 1, write_from=cur):
                 grown[i] = cur
         active = [i for i in grown if self.slots[i] is not None]
         self._occupancy.append(
@@ -1043,7 +1169,7 @@ class Scheduler:
                 continue                    # evicted by an older lane's growth
             cur = self.pool.length(req.uid)
             w = min(k, req.max_new_tokens - len(req.generated))
-            if self._grow_or_preempt(req, cur + w + 1):
+            if self._grow_or_preempt(req, cur + w + 1, write_from=cur):
                 windows[i] = (cur, w)
         active = [i for i in windows if self.slots[i] is not None]
         self._occupancy.append(
@@ -1267,6 +1393,19 @@ class Scheduler:
             tokens_per_forward=(self._decode_appended
                                 / max(self._lane_steps, 1)),
             acceptance_by_bucket=acceptance_by_prompt_bucket(fin),
+            prefix_cache=self.bm.prefix is not None,
+            prefix_cache_hits=self.bm.prefix.hits if self.bm.prefix else 0,
+            prefix_cache_misses=(self.bm.prefix.misses
+                                 if self.bm.prefix else 0),
+            prefix_cache_hit_tokens=(self.bm.prefix.hit_tokens
+                                     if self.bm.prefix else 0),
+            prefix_cache_hit_rate=(
+                self.bm.prefix.hit_tokens
+                / max(self.bm.prefix.lookup_tokens, 1)
+                if self.bm.prefix else 0.0),
+            cow_copies=self.pool.cow_copies,
+            blocks_retained=(self.bm.prefix.num_retained
+                             if self.bm.prefix else 0),
             phase_ms=dict(self._phase_ms),
             step_wall_ms_total=self._step_wall_ms_total,
             trace_events=self.trace.emitted if self.trace.enabled else 0,

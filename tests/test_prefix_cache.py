@@ -1,0 +1,375 @@
+"""Cross-request prefix caching: the golden wall and the mechanism.
+
+Golden tier: turning the prefix cache ON must be *invisible in the token
+stream* — greedy and seeded-sampled output is identical to cache-off for
+every prefill chunking, for prompts ending exactly on / around block
+boundaries, under tiny-pool preemption (recompute and swap), and under
+speculative decode whose rejected verify windows roll back through shared
+prefix blocks.  Mechanism tier: chained-hash determinism and parent
+dependence, the partial-tail exclusion, LRU retention/reclaim order,
+copy-on-write content isolation, refcount-aware truncate, and the
+ServeReport / benchmark-workload accounting.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import (BlockManager, PagedKVPool, PrefixCache,
+                              block_hash, prefix_block_hashes, _HASH_ROOT)
+from repro.models import lm
+from repro.runtime import serve_loop
+
+
+def _shared_workload(cfg, n_req=5, shared=12, seed=7, temp=0.0, max_new=8,
+                     suffixes=None):
+    """``n_req`` requests sharing a ``shared``-token system prefix, each with
+    a small unique suffix (``suffixes`` overrides the per-request lengths —
+    0 means the prompt IS the bare shared prefix).  Staggered arrivals give
+    the first resident time to register its blocks before later lookups."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
+    reqs = []
+    for i in range(n_req):
+        n_suf = (suffixes[i] if suffixes is not None
+                 else int(rng.integers(2, 6)))
+        tail = rng.integers(0, cfg.vocab_size, n_suf).astype(np.int32)
+        reqs.append(serve_loop.Request(
+            uid=i, prompt=np.concatenate([head, tail]),
+            max_new_tokens=max_new, arrival=i * 0.5,
+            temperature=temp, top_p=0.9, seed=11 + i))
+    return reqs
+
+
+def _run(params, buffers, cfg, workload, *, prefix_cache, num_blocks=64,
+         admission="preempt", eviction="recompute", chunk=4, max_slots=2,
+         spec_k=0, rank=0):
+    scfg = serve_loop.SchedulerConfig(
+        max_slots=max_slots, block_size=4, num_blocks=num_blocks, max_len=48,
+        prefill_bucket=4, prefill_chunk_tokens=chunk,
+        admission=admission, eviction=eviction,
+        speculate_k=spec_k, draft_rank=rank, prefix_cache=prefix_cache)
+    sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+    report = sched.run(workload)
+    return {r.uid: list(r.generated) for r in sched.finished}, report, sched
+
+
+def _drained(sched):
+    """Pool conservation after the stream drains: every block is either on
+    the free list or LRU-retained by the cache — nothing leaked."""
+    retained = sched.bm.prefix.num_retained if sched.bm.prefix else 0
+    return sched.pool.allocator.num_free + retained == sched.pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# golden invariant: the cache never changes tokens
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [0, 6])
+@pytest.mark.parametrize("temp", [0.0, 0.8])
+def test_cache_on_matches_off(tiny_elite_cfg, tiny_elite_model, chunk, temp):
+    """Greedy and seeded-sampled streams are bit-identical with the cache on,
+    for both one-shot (chunk=0) and chunked prefill — a hit only skips
+    recomputation of pages whose content is already exact."""
+    params, buffers = tiny_elite_model
+    base, base_rep, _ = _run(params, buffers, tiny_elite_cfg,
+                             _shared_workload(tiny_elite_cfg, temp=temp),
+                             prefix_cache=False, chunk=chunk)
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg,
+                           _shared_workload(tiny_elite_cfg, temp=temp),
+                           prefix_cache=True, chunk=chunk)
+    assert out == base
+    assert rep.completed == base_rep.completed == 5
+    assert rep.prefix_cache_hits > 0 and rep.prefix_cache_hit_tokens > 0
+    assert base_rep.prefix_cache_hits == base_rep.prefix_cache_hit_tokens == 0
+    assert _drained(sched)
+
+
+def test_block_boundary_prompt_lengths(tiny_elite_cfg, tiny_elite_model):
+    """Prompts ending exactly on a block boundary, one past it, and one short
+    of the next — including a full duplicate of the shared prefix (suffix 0):
+    the hit cap must always leave the final prompt token to re-prefill so the
+    first-token logits exist, and streams still match cache-off."""
+    params, buffers = tiny_elite_model
+    suffixes = [0, 1, 3, 4, 0]       # prompt lens 12, 13, 15, 16, 12 (bs=4)
+    wl = lambda: _shared_workload(tiny_elite_cfg, suffixes=suffixes)
+    base, _, _ = _run(params, buffers, tiny_elite_cfg, wl(),
+                      prefix_cache=False)
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg, wl(),
+                           prefix_cache=True)
+    assert out == base
+    assert rep.prefix_cache_hits > 0
+    # every request re-prefilled at least its final prompt token
+    assert all(r.prefix_hit_tokens < len(r.prompt) for r in sched.finished)
+    assert _drained(sched)
+
+
+@pytest.mark.parametrize("eviction", ["recompute", "swap"])
+def test_preemption_with_prefix_cache(tiny_elite_cfg, tiny_elite_model,
+                                      eviction, stress_blocks):
+    """Tiny pool → forced preemptions while prefixes are shared: eviction
+    must never free or roll back a block another chain references, and the
+    streams still equal the ample-pool cache-off baseline."""
+    params, buffers = tiny_elite_model
+    base, base_rep, _ = _run(params, buffers, tiny_elite_cfg,
+                             _shared_workload(tiny_elite_cfg),
+                             prefix_cache=False, num_blocks=64,
+                             admission="watermark")
+    assert base_rep.preemptions == 0
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg,
+                           _shared_workload(tiny_elite_cfg),
+                           prefix_cache=True,
+                           num_blocks=stress_blocks(10), eviction=eviction)
+    assert out == base
+    assert rep.preemptions > 0
+    assert _drained(sched)
+
+
+def test_speculative_with_prefix_cache(tiny_elite_cfg, tiny_elite_model,
+                                       stress_blocks):
+    """Speculative decode over shared prefixes: a rejected verify window
+    truncates the chain mid-macro-step — the rollback must un-link, never
+    free, blocks other chains still read, and greedy streams stay identical
+    to plain cache-off decode (truncated draft rank forces real rejections)."""
+    params, buffers = tiny_elite_model
+    nb = stress_blocks(64)
+    base, _, _ = _run(params, buffers, tiny_elite_cfg,
+                      _shared_workload(tiny_elite_cfg),
+                      prefix_cache=False, num_blocks=nb)
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg,
+                           _shared_workload(tiny_elite_cfg),
+                           prefix_cache=True, num_blocks=nb,
+                           spec_k=2, rank=16)
+    assert out == base
+    assert rep.draft_forwards > 0
+    assert rep.prefix_cache_hits > 0
+    assert _drained(sched)
+
+
+# ---------------------------------------------------------------------------
+# hash chain: determinism, parent dependence, partial-tail exclusion
+# ---------------------------------------------------------------------------
+
+def test_hash_chain_deterministic():
+    toks = np.arange(13, dtype=np.int32)
+    a = prefix_block_hashes(toks, 4)
+    b = prefix_block_hashes(toks.copy(), 4)
+    assert a == b and len(a) == 3            # 13 tokens → 3 full blocks
+    # growing into the partial tail never perturbs existing block hashes
+    assert prefix_block_hashes(toks[:15], 4) == a
+    # the chain is incremental: hash i is reproducible from hash i-1
+    assert a[2] == block_hash(a[1], toks[8:12])
+    assert a[0] == block_hash(_HASH_ROOT, toks[:4])
+
+
+def test_hash_parent_dependence():
+    """Identical block-i tokens with different earlier tokens must produce
+    different block-i hashes — content-equality of one block is not enough."""
+    x = np.arange(8, dtype=np.int32)
+    y = x.copy()
+    y[0] += 1                                 # differs only in block 0
+    hx, hy = prefix_block_hashes(x, 4), prefix_block_hashes(y, 4)
+    assert hx[0] != hy[0]
+    assert hx[1] != hy[1]                     # chained: block 1 diverges too
+    assert np.array_equal(x[4:], y[4:])       # …despite identical tokens
+
+
+def test_partial_tail_never_hashed():
+    assert prefix_block_hashes(np.arange(3, dtype=np.int32), 4) == []
+    toks = np.arange(10, dtype=np.int32)
+    assert len(prefix_block_hashes(toks, 4)) == 2   # tail 8:10 uncovered
+
+
+def test_register_skips_partial_tail(tiny_elite_cfg):
+    """A chain 10 tokens long with block_size 4 claims exactly its 2 full
+    blocks; the partially-written third block stays uncached."""
+    pool = PagedKVPool(tiny_elite_cfg, num_blocks=8, block_size=4)
+    bm = BlockManager(pool, prefix_cache=True)
+    bm.grow(0, 10)
+    toks = np.arange(10, dtype=np.int32)
+    assert bm.register_prefix(0, toks) == 2
+    assert bm.prefix.num_cached == 2
+    table = pool.block_table(0)
+    assert bm.prefix.is_cached(table[0]) and bm.prefix.is_cached(table[1])
+    assert not bm.prefix.is_cached(table[2])
+
+
+def test_lookup_caps_final_token(tiny_elite_cfg):
+    """Even a fully-cached identical prompt re-prefills its last token: the
+    hit is capped at (len-1)//block_size blocks so the first-token logits
+    row exists."""
+    pool = PagedKVPool(tiny_elite_cfg, num_blocks=8, block_size=4)
+    bm = BlockManager(pool, prefix_cache=True)
+    toks = np.arange(12, dtype=np.int32)
+    bm.grow(0, 12)
+    assert bm.register_prefix(0, toks) == 3
+    assert bm.lookup_prefix(1, toks) == 8            # not 12
+    assert bm.lookup_prefix(2, np.arange(13, dtype=np.int32)) == 12
+    assert pool._refcount[pool.block_table(0)[0]] == 3
+
+
+# ---------------------------------------------------------------------------
+# LRU retention and claim semantics
+# ---------------------------------------------------------------------------
+
+def test_lru_retention_eviction_order():
+    """Reclaim pops the least-recently-used retained block first, and
+    re-retaining refreshes recency."""
+    pc = PrefixCache()
+    for b in (1, 2, 3):
+        assert pc.claim(bytes([b]) * 32, b)
+        assert pc.retain(b)
+    pc.retain(1)                              # refresh: 1 becomes newest
+    assert pc.reclaim(2) == [2, 3]            # oldest first, 1 survives
+    assert pc.num_retained == 1 and pc.num_cached == 1
+    assert pc.reclaim(5) == [1]               # reclaim is capped by supply
+    assert pc.num_retained == pc.num_cached == 0
+    assert pc.reclaimed == 3
+
+
+def test_first_claim_wins():
+    pc = PrefixCache()
+    h1, h2 = b"a" * 32, b"b" * 32
+    assert pc.claim(h1, 7)
+    assert not pc.claim(h1, 8)                # duplicate hash keeps block 7
+    assert not pc.claim(h2, 7)                # block already claimed
+    assert pc.get(h1) == 7 and pc.get(h2) is None
+    pc.invalidate(7)
+    assert pc.get(h1) is None and pc.num_cached == 0
+
+
+def test_lookup_refreshes_lru(tiny_elite_cfg):
+    """A retained block served to a lookup leaves the reclaimable LRU; the
+    allocator can no longer steal it out from under its new reader."""
+    pool = PagedKVPool(tiny_elite_cfg, num_blocks=4, block_size=4)
+    bm = BlockManager(pool, prefix_cache=True)
+    toks = np.arange(8, dtype=np.int32)
+    bm.grow(0, 8)
+    bm.register_prefix(0, toks)
+    bm.release(0)                             # both blocks retire to the LRU
+    assert bm.prefix.num_retained == 2
+    assert bm.lookup_prefix(1, np.arange(9, dtype=np.int32)) == 8
+    assert bm.prefix.num_retained == 0        # back in a chain, off the LRU
+    # exhaust the pool: the shared blocks must never be reclaimed
+    bm.grow(2, 8)
+    shared = set(pool.block_table(1))
+    assert shared.isdisjoint(pool.block_table(2))
+    assert bm.prefix.reclaimed == 0
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write and refcount-aware truncate
+# ---------------------------------------------------------------------------
+
+def test_cow_preserves_reader_content(tiny_elite_cfg, tiny_elite_model):
+    """A writer into a shared block gets a private copy with the content
+    carried over; the reader's block, its pages, and its cache claim are
+    untouched."""
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    bs, sp = 4, 8
+    pool = PagedKVPool(cfg, num_blocks=8, block_size=bs)
+    bm = BlockManager(pool, prefix_cache=True)
+    toks = np.arange(sp, dtype=np.int32) % cfg.vocab_size
+    pool.ensure_capacity(0, sp)
+    padded = np.zeros((1, sp), np.int32)
+    padded[0] = toks
+    sm = pool.prefill_slot_mapping(0, 0, sp, sp)[None]
+    _, pool.pages = lm.apply_prefill_paged(
+        params, buffers, cfg, {"tokens": jnp.asarray(padded)}, pool.pages,
+        jnp.asarray(sm))
+    bm.register_prefix(0, toks)
+    assert bm.lookup_prefix(1, toks) == 4     # seq 1 shares block 0
+    b0 = pool.block_table(0)[0]
+    assert pool.block_table(1) == [b0] and pool._refcount[b0] == 2
+
+    def content(block):
+        slots = np.arange(block * bs, (block + 1) * bs)
+        return np.asarray(pool.pages["p0"]["k_e"])[:, slots].copy()
+
+    before = content(b0)
+    bm.prepare_write(1, 0, 4)                 # seq 1 is about to scatter
+    new = pool.block_table(1)[0]
+    assert new != b0, "writer must repoint to a private copy"
+    assert pool.cow_copies == 1
+    assert pool._refcount[b0] == 1 and pool._refcount[new] == 1
+    assert bm.prefix.is_cached(b0) and not bm.prefix.is_cached(new)
+    np.testing.assert_array_equal(content(b0), before)     # reader untouched
+    np.testing.assert_array_equal(content(new), before)    # content carried
+
+
+def test_truncate_shared_block_unlinks_not_frees(tiny_elite_cfg):
+    """Rolling one chain back through a shared block un-links it from that
+    chain only: the other reader keeps it, it never touches the free list,
+    and nothing rolls back."""
+    pool = PagedKVPool(tiny_elite_cfg, num_blocks=8, block_size=4)
+    bm = BlockManager(pool, prefix_cache=True)
+    toks = np.arange(12, dtype=np.int32)
+    bm.grow(0, 12)
+    bm.register_prefix(0, toks)
+    assert bm.lookup_prefix(1, toks) == 8     # shares blocks a, b
+    a, b = pool.block_table(1)
+    free_before = pool.allocator.num_free
+    bm.truncate(1, 0)                         # roll the sharer all the way back
+    assert pool.block_table(1) == []
+    assert pool.block_table(0) == [a, b, pool.block_table(0)[2]]
+    assert pool._refcount[a] == pool._refcount[b] == 1
+    assert pool.allocator.num_free == free_before   # nothing freed
+    assert bm.prefix.num_retained == 0        # still referenced by seq 0
+    # now the sole owner retires: cached blocks retain instead of freeing
+    bm.release(0)
+    assert bm.prefix.num_retained == 3
+    assert pool.allocator.num_free == free_before
+
+
+def test_truncate_single_owner_still_frees(tiny_elite_cfg):
+    """Regression for the pre-cache path: an exclusively-owned, uncached
+    tail block goes straight back to the allocator on truncate."""
+    pool = PagedKVPool(tiny_elite_cfg, num_blocks=8, block_size=4)
+    bm = BlockManager(pool)                   # no prefix cache
+    bm.grow(0, 12)
+    assert pool.allocator.num_free == 5
+    bm.truncate(0, 5)                         # drop blocks 2 and 3… keep 0,1
+    assert pool.allocator.num_free == 6
+    assert len(pool.block_table(0)) == 2 and pool.length(0) == 5
+    bm.truncate(0, 0)
+    assert pool.allocator.num_free == 8 and pool.block_table(0) == []
+
+
+# ---------------------------------------------------------------------------
+# accounting: ServeReport fields and the benchmark workload
+# ---------------------------------------------------------------------------
+
+def test_serve_report_prefix_fields(tiny_elite_cfg, tiny_elite_model):
+    params, buffers = tiny_elite_model
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg,
+                           _shared_workload(tiny_elite_cfg),
+                           prefix_cache=True)
+    assert rep.prefix_cache is True
+    assert rep.prefix_cache_hits + rep.prefix_cache_misses > 0
+    assert 0.0 < rep.prefix_cache_hit_rate <= 1.0
+    assert rep.prefix_cache_hit_tokens == \
+        sum(r.prefix_hit_tokens for r in sched.finished)
+    assert rep.cow_copies == sched.pool.cow_copies >= 0
+    assert rep.blocks_retained == sched.bm.prefix.num_retained
+    assert "pc[" in rep.summary()
+    _, off, _ = _run(params, buffers, tiny_elite_cfg,
+                     _shared_workload(tiny_elite_cfg), prefix_cache=False)
+    assert off.prefix_cache is False
+    assert off.prefix_cache_hit_rate == 0.0 and off.cow_copies == 0
+    assert "pc[" not in off.summary()
+
+
+def test_shared_prefix_workload_deterministic():
+    from benchmarks.run import shared_prefix_workload
+    a = shared_prefix_workload()
+    b = shared_prefix_workload()
+    assert len(a) == len(b) == 10
+    for ra, rb in zip(a, b):
+        assert np.array_equal(ra.prompt, rb.prompt)
+        assert (ra.uid, ra.arrival, ra.seed, ra.temperature) == \
+            (rb.uid, rb.arrival, rb.seed, rb.temperature)
+    # 9 of 10 share the documented system prefix; one control does not
+    head = a[0].prompt[:64]
+    sharers = [r for r in a if len(r.prompt) >= 64
+               and np.array_equal(r.prompt[:64], head)]
+    assert len(sharers) == 9

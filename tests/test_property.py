@@ -228,6 +228,104 @@ def test_block_manager_never_leaks_or_double_frees(ops, num_blocks):
     assert pool.allocator.num_free == num_blocks
 
 
+_PC_OPS = st.lists(
+    st.tuples(st.sampled_from(["grow", "free", "swap_out", "swap_in",
+                               "truncate", "lookup", "register", "write"]),
+              st.integers(0, 3),            # seq id
+              st.integers(1, 40)),          # token count / position source
+    min_size=1, max_size=50)
+
+
+@given(ops=_PC_OPS, num_blocks=st.integers(3, 10))
+@settings(max_examples=25, deadline=None)
+def test_block_manager_prefix_cache_conservation(ops, num_blocks):
+    """Prefix-cache op-fuzz: arbitrary interleavings of growth, release,
+    swap, truncate, cache lookup/registration and copy-on-write barriers
+    keep the pool exactly conserved after EVERY op:
+
+    * free list + distinct chain-referenced + LRU-retained == pool size
+    * refcounts equal the number of chains referencing each block (no leak,
+      no double-free, no phantom reference)
+    * a block covered by a just-issued write barrier has refcount exactly 1
+      and no live cache claim — no write is ever visible through another
+      resident's chain
+    * retained blocks are always cached, never on the free list, never in a
+      chain; the hash map stays a bijection
+
+    Every sequence presents the same token stream, so lookups genuinely
+    collide and sharing pressure is maximal."""
+    import collections as _c
+    import dataclasses as dc
+    from repro.configs import get_config
+    from repro.configs.base import EliteKVConfig
+    from repro.core.cache import BlockManager, OutOfBlocks, PagedKVPool
+    cfg = dc.replace(
+        get_config("tinyllama_1_1b").reduced(num_layers=2, vocab_size=64),
+        elitekv=EliteKVConfig(enabled=True, elite_r=2, d_ckv=8))
+    pool = PagedKVPool(cfg, num_blocks=num_blocks, block_size=4)
+    bm = BlockManager(pool, prefix_cache=True)
+    pc = bm.prefix
+    swapped = {}
+    stream = np.arange(64, dtype=np.int32) % 64   # shared by every sequence
+
+    def check():
+        alloc = pool.allocator
+        counts = _c.Counter(b for sid in list(pool._tables)
+                            for b in pool.block_table(sid))
+        referenced = set(counts)
+        retained = set(pc._lru)
+        free = set(alloc._free)
+        # partition: every block is exactly one of free/referenced/retained
+        assert alloc.num_free + len(referenced) + len(retained) == num_blocks
+        assert not referenced & retained and not referenced & free \
+            and not retained & free
+        assert dict(counts) == pool._refcount, "refcount drift"
+        # retained ⊆ cached; hash map is a bijection
+        assert retained <= set(pc._by_block)
+        assert len(pc._by_hash) == len(pc._by_block)
+        assert set(pc._by_hash.values()) == set(pc._by_block)
+
+    for op, sid, tokens in ops:
+        try:
+            if op == "grow":
+                bm.grow(sid, tokens)
+            elif op == "free":
+                bm.release(sid)
+            elif op == "swap_out":
+                s = bm.preempt_swap_out(sid, pool.length(sid))
+                if s is not None:
+                    swapped[sid] = s
+            elif op == "swap_in" and sid in swapped \
+                    and not pool.block_table(sid) and pool.length(sid) == 0:
+                bm.swap_in(sid, swapped.pop(sid))
+            elif op == "truncate":
+                bm.truncate(sid, min(tokens, pool.length(sid)))
+            elif op == "lookup" and not pool.block_table(sid) \
+                    and pool.length(sid) == 0:
+                bm.lookup_prefix(sid, stream[:tokens])
+            elif op == "register":
+                bm.register_prefix(sid, stream[:pool.length(sid)])
+            elif op == "write" and pool.length(sid) > 0:
+                length = pool.length(sid)
+                start = tokens % length
+                bm.prepare_write(sid, start, length)
+                bs = pool.block_size
+                table = pool.block_table(sid)
+                for bi in range(start // bs, len(table)):
+                    b = table[bi]
+                    # write isolation: the barrier leaves every covered
+                    # block exclusively owned and unclaimed
+                    assert pool._refcount[b] == 1, "write into shared block"
+                    assert not pc.is_cached(b), "write into cached block"
+        except OutOfBlocks:
+            pass                            # valid outcome; state must stay sane
+        check()
+    for sid in list(pool._tables):
+        bm.release(sid)
+    check()
+    assert pool.allocator.num_free + pc.num_retained == num_blocks
+
+
 @given(B=st.integers(1, 3), length=st.integers(1, 32), seed=st.integers(0, 50))
 @settings(max_examples=10, deadline=None)
 def test_elite_decode_kernel_vs_oracle_property(B, length, seed):

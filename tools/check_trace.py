@@ -17,6 +17,10 @@ Trace checks (Chrome trace-event JSON, the format serve.py --trace writes):
   overlap means the emitter timed overlapping phases, which would
   double-count wall time)
 * timestamps are non-negative and finite
+* prefix-cache instants carry well-formed args: ``prefix_hit`` needs
+  positive numeric ``tokens``/``blocks``, ``prefix_miss`` numeric
+  ``tokens``, and ``cow`` numeric ``block``/``copy`` with
+  ``block != copy`` (a block can never be its own COW copy)
 
 Metrics checks (Prometheus text exposition format):
 
@@ -26,6 +30,10 @@ Metrics checks (Prometheus text exposition format):
 * histograms are internally consistent: bucket counts are cumulative
   (non-decreasing as ``le`` ascends), the ``+Inf`` bucket equals
   ``_count``, and ``_sum`` / ``_count`` are both present
+* the ``serve_prefix_cache_*`` family is all-or-nothing (a registry that
+  exports one of the six instruments must export them all) and
+  self-consistent: zero hits cannot coexist with nonzero hit tokens,
+  and no member may be negative
 
 Exit status 0 and a one-line summary on success; every violation is
 printed and the exit status is 1.  CI's ``obs`` job runs this against a
@@ -48,6 +56,17 @@ _META_NAMES = frozenset({"process_name", "process_labels",
                          "process_sort_index", "thread_name",
                          "thread_sort_index"})
 _METRIC_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+#: required numeric args per prefix-cache instant (serve_loop/core.cache emit)
+_CACHE_INSTANT_ARGS = {"prefix_hit": ("tokens", "blocks"),
+                       "prefix_miss": ("tokens",),
+                       "cow": ("block", "copy")}
+#: the complete serve_prefix_cache_* instrument family — all-or-nothing
+_PC_FAMILY = ("serve_prefix_cache_hits_total",
+              "serve_prefix_cache_misses_total",
+              "serve_prefix_cache_hit_tokens_total",
+              "serve_prefix_cache_cow_total",
+              "serve_prefix_cache_blocks_retained",
+              "serve_prefix_cache_blocks_cached")
 _SAMPLE_RE = re.compile(
     r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
     r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)(?:\s+\d+)?$")
@@ -132,6 +151,21 @@ def check_trace(path: Path) -> int:
         elif ph == "i":
             if e.get("s", "t") not in ("g", "p", "t"):
                 err(f"{where}: instant with bad scope {e.get('s')!r}")
+            spec = _CACHE_INSTANT_ARGS.get(e["name"])
+            if spec is not None:
+                iargs = e.get("args") if isinstance(e.get("args"), dict) else {}
+                for field in spec:
+                    if not _num(iargs.get(field)):
+                        err(f"{where}: {e['name']} instant missing numeric "
+                            f"args.{field}")
+                if e["name"] == "prefix_hit" and \
+                        _num(iargs.get("tokens")) and iargs["tokens"] <= 0:
+                    err(f"{where}: prefix_hit with non-positive tokens "
+                        f"{iargs['tokens']!r}")
+                if e["name"] == "cow" and _num(iargs.get("block")) and \
+                        iargs.get("block") == iargs.get("copy"):
+                    err(f"{where}: cow instant copies block "
+                        f"{iargs['block']!r} onto itself")
 
     for key, stack in sorted(be_stacks.items()):
         if stack:
@@ -242,6 +276,25 @@ def check_metrics(path: Path) -> int:
         if buckets[-1][1] != count:
             err(f"{path}: histogram {owner} +Inf bucket {buckets[-1][1]} "
                 f"!= _count {count}")
+
+    # serve_prefix_cache_* family: all-or-nothing and self-consistent
+    pc_vals = {n: v for n, _, v in samples if n in _PC_FAMILY}
+    stray = sorted(n for n, _, _ in samples
+                   if n.startswith("serve_prefix_cache_")
+                   and n not in _PC_FAMILY)
+    for n in stray:
+        err(f"{path}: unknown serve_prefix_cache_* instrument {n!r}")
+    if pc_vals:
+        for n in _PC_FAMILY:
+            if n not in pc_vals:
+                err(f"{path}: serve_prefix_cache_* family incomplete — "
+                    f"missing {n}")
+        for n, v in sorted(pc_vals.items()):
+            if v < 0:
+                err(f"{path}: {n} is negative ({v})")
+        if pc_vals.get("serve_prefix_cache_hits_total") == 0 and \
+                pc_vals.get("serve_prefix_cache_hit_tokens_total", 0) > 0:
+            err(f"{path}: hit_tokens_total > 0 with hits_total == 0")
     return len(samples)
 
 
