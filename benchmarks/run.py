@@ -322,7 +322,9 @@ def shared_prefix_workload(vocab_size: int = 128, n: int = 10,
 
 #: Structured serving rows accumulated by ``serving()`` and written to
 #: ``BENCH_serving.json`` at the repo root (schema in docs/observability.md).
-SERVING_SCHEMA_VERSION = 1
+#: v2: rows carry ``pool_dtype``/``pool_bytes_per_token``, plus the
+#: ``pool_capacity_*`` quantization scenario pair.
+SERVING_SCHEMA_VERSION = 2
 
 
 def _serving_row(scenario: str, rep, us: float, **extra):
@@ -349,6 +351,8 @@ def _serving_row(scenario: str, rep, us: float, **extra):
         tokens_per_forward=round(rep.tokens_per_forward, 3),
         phase_ms={k: round(v, 2) for k, v in rep.phase_ms.items()},
         step_wall_ms_total=round(rep.step_wall_ms_total, 2),
+        pool_dtype=rep.pool_dtype,
+        pool_bytes_per_token=rep.pool_bytes_per_token,
     )
     row.update(extra)
     return row
@@ -521,6 +525,86 @@ def serving():
          f"prefill_chunks={on_rep.prefill_chunks};"
          f"blocks_hw={on_rep.pool_high_water_blocks};"
          f"tokens_match_off={match};ttft_lower_than_off={ttft_win}")
+
+    # int8 pool capacity vs quality: the same fixed greedy workload through a
+    # f32 pool (block_size 16) and an int8 pool (block_size 64 — roughly the
+    # same bytes per block, so peak *blocks* compare capacity honestly), then
+    # teacher-forced per-position top-1 agreement and ppl delta between the
+    # two pools over the f32 streams.  Quantization is the first serving
+    # feature that cannot be token-identical, so its wall is a pinned
+    # agreement threshold instead (tests/test_quant.py pins the same property
+    # suite-side); both inequalities below are asserted, not just recorded.
+    from repro.core.cache import PagedKVPool
+    qparams, qbuffers = lm.init(jax.random.PRNGKey(7), cfg)
+    B, P, new = 4, 16, 48
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                                 cfg.vocab_size, jnp.int32)
+
+    def run_pool(dtype, block_size, num_blocks):
+        scfg = serve_loop.SchedulerConfig(
+            max_slots=B, block_size=block_size, num_blocks=num_blocks,
+            max_new_tokens=new, max_len=P + new + 1, cache_dtype=dtype)
+        t0 = time.time()
+        out, rep = serve_loop.generate_paged(qparams, qbuffers, cfg, prompts,
+                                             new, scfg)
+        us = (time.time() - t0) * 1e6 / max(rep.decode_steps, 1)
+        return out, rep, us
+
+    out_f, rep_f, us_f = run_pool(jnp.float32, 16, 24)
+    _, rep_q, us_q = run_pool("int8", 64, 12)
+
+    full = jnp.concatenate([prompts, jnp.asarray(out_f)], axis=1)
+    n_tok = int(full.shape[1])
+
+    def forced_logits(dtype, block_size):
+        """Teacher-forced logits over the f32 streams: both pools score the
+        IDENTICAL context, so agreement is per-position (no compounding of a
+        single early argmax flip through every later token)."""
+        pool = PagedKVPool(cfg, num_blocks=2 * B * (-(-n_tok // block_size)),
+                           block_size=block_size, dtype=dtype)
+        sms = []
+        for b in range(B):
+            pool.ensure_capacity(b, n_tok)
+            sms.append(pool.prefill_slot_mapping(b, 0, n_tok, n_tok))
+        logits, _ = lm.apply_prefill_paged(
+            qparams, qbuffers, cfg, {"tokens": full}, pool.pages,
+            jnp.asarray(np.stack(sms)))
+        return np.asarray(logits, np.float32)[:, P - 1:n_tok - 1]
+
+    l_f = forced_logits(jnp.float32, 16)
+    l_q = forced_logits("int8", 64)
+    top1_agreement = float((l_f.argmax(-1) == l_q.argmax(-1)).mean())
+    targets = jnp.asarray(out_f)
+
+    def forced_ppl(logits):
+        logp = jax.nn.log_softmax(jnp.asarray(logits), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        return float(np.exp(float(nll.mean())))
+
+    ppl_f, ppl_q = forced_ppl(l_f), forced_ppl(l_q)
+    blocks_ratio = rep_q.pool_high_water_blocks / rep_f.pool_high_water_blocks
+    assert top1_agreement >= 0.98, top1_agreement
+    assert blocks_ratio <= 0.55, blocks_ratio
+    json_rows.append(_serving_row(
+        "pool_capacity_f32", rep_f, us_f, block_size=16,
+        bytes_per_block=16 * rep_f.pool_bytes_per_token,
+        forced_ppl=round(ppl_f, 4)))
+    json_rows.append(_serving_row(
+        "pool_capacity_int8", rep_q, us_q, block_size=64,
+        bytes_per_block=64 * rep_q.pool_bytes_per_token,
+        peak_blocks_ratio_vs_f32=round(blocks_ratio, 4),
+        top1_agreement_vs_f32=round(top1_agreement, 4),
+        forced_ppl=round(ppl_q, 4),
+        ppl_delta_vs_f32=round(ppl_q - ppl_f, 4)))
+    emit("serving/pool_capacity_f32", us_f,
+         f"blocks_hw={rep_f.pool_high_water_blocks};block_size=16;"
+         f"bytes_tok={rep_f.pool_bytes_per_token};ppl={ppl_f:.3f}")
+    emit("serving/pool_capacity_int8", us_q,
+         f"blocks_hw={rep_q.pool_high_water_blocks};block_size=64;"
+         f"bytes_tok={rep_q.pool_bytes_per_token};"
+         f"peak_blocks_ratio={blocks_ratio:.3f};"
+         f"top1_agreement={top1_agreement:.4f};"
+         f"ppl_delta={ppl_q - ppl_f:+.4f}")
 
     out = write_serving_json(json_rows)
     print(f"wrote {out} ({len(json_rows)} scenario rows, "

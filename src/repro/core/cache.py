@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import quant
 from repro.obs.trace import NULL_TRACER
 
 
@@ -246,6 +247,8 @@ class PoolStats:
     blocks_shared: int = 0     # blocks referenced by more than one chain
     blocks_retained: int = 0   # refcount-0 prefix-cache blocks (reclaimable)
     cow_copies: int = 0        # lifetime copy-on-write block copies
+    dtype: str = "float32"     # pool storage dtype ("int8" = quantized)
+    bytes_per_token: int = 0   # actual bytes/slot incl. quantization scales
 
 
 class PagedKVPool:
@@ -269,7 +272,14 @@ class PagedKVPool:
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
-        self.dtype = dtype
+        # dtype="int8" (string or dtype) selects the quantized pool: stream
+        # leaves store symmetric-absmax int8 rows and every stream gains a
+        # per-slot f32 scale leaf "<name>_scale" beside it (core/quant.py).
+        # Scales keep the [n_super, n_slots, ...] slot axis at position 1, so
+        # COW copies, host swap and truncate handle them with zero special
+        # cases — they are just more page leaves.
+        self.dtype = jnp.dtype(dtype)
+        self.quantized = quant.is_int8(self.dtype)
         self.allocator = BlockAllocator(num_blocks)
         self._tables: Dict[int, List[int]] = {}   # seq_id → block chain
         self._lengths: Dict[int, int] = {}        # seq_id → live token count
@@ -282,12 +292,18 @@ class PagedKVPool:
         r2 = 2 * e.elite_r
 
         def _streams():
-            s = {"k_e": jnp.zeros((n_super, n_slots, cfg.n_kv_heads, r2), dtype)}
+            tails = {"k_e": (cfg.n_kv_heads, r2)}
             if e.lrd == "joint":
-                s["c"] = jnp.zeros((n_super, n_slots, e.d_ckv), dtype)
+                tails["c"] = (e.d_ckv,)
             else:
-                s["c_k"] = jnp.zeros((n_super, n_slots, e.d_ck), dtype)
-                s["c_v"] = jnp.zeros((n_super, n_slots, e.d_cv), dtype)
+                tails["c_k"] = (e.d_ck,)
+                tails["c_v"] = (e.d_cv,)
+            s = {}
+            for name, tail in tails.items():
+                s[name] = jnp.zeros((n_super, n_slots) + tail, self.dtype)
+                if self.quantized:
+                    s[name + "_scale"] = jnp.zeros((n_super, n_slots),
+                                                   jnp.float32)
             return s
 
         self.pages = {f"p{p}": _streams() for p in range(cfg.block_period)}
@@ -494,11 +510,18 @@ class PagedKVPool:
     def floats_per_token(self) -> int:
         return model_cache_floats_per_token(self.cfg)
 
+    def bytes_per_token(self) -> int:
+        """Actual pool bytes per token slot, summed over every page leaf —
+        int8 stream rows AND their f32 scales in quantized mode (the honest
+        capacity number the serving stats report)."""
+        n_slots = self.num_blocks * self.block_size
+        return sum(a.nbytes // n_slots
+                   for layer in self.pages.values() for a in layer.values())
+
     def stats(self) -> PoolStats:
-        itemsize = jnp.dtype(self.dtype).itemsize
         live = sum(self._lengths.values())
         alloc_tok = self.allocator.num_used * self.block_size
-        fpt = self.floats_per_token()
+        bpt = self.bytes_per_token()
         return PoolStats(
             block_size=self.block_size, num_blocks=self.num_blocks,
             blocks_in_use=self.allocator.num_used,
@@ -506,8 +529,9 @@ class PagedKVPool:
             high_water_blocks=self.allocator.high_water,
             total_allocs=self.allocator.total_allocs,
             live_tokens=live, allocated_tokens=alloc_tok,
-            live_bytes=live * fpt * itemsize,
-            allocated_bytes=alloc_tok * fpt * itemsize,
+            live_bytes=live * bpt,
+            allocated_bytes=alloc_tok * bpt,
+            dtype=str(self.dtype), bytes_per_token=bpt,
             blocks_shared=sum(1 for c in self._refcount.values() if c > 1),
             blocks_retained=(self.prefix.num_retained
                              if self.prefix is not None else 0),

@@ -30,6 +30,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.core import rope as rope_lib
 from repro.models.attention import causal_mask
 
@@ -242,16 +243,33 @@ def apply_decode(params, cfg, buffers, x, index, cache, use_kernel: bool = False
 def _scatter_pages(pages, k_e_new, c_k_new, c_v_new, slot_mapping):
     """Write per-token compressed streams into pool pages at flat slots.
     Out-of-range slots (the inactive-lane / prompt-padding sentinel) are
-    dropped.  k_e_new [N,nkv,2r], c_*_new [N,dc], slot_mapping [N]."""
+    dropped.  k_e_new [N,nkv,2r], c_*_new [N,dc], slot_mapping [N].
+
+    Quantized pool (``"k_e_scale" in pages``, see ``core/quant.py``): each
+    token row is symmetric-absmax quantized to int8 *here, at write time* —
+    a pure function of the row, so chunked/one-shot/preempted/speculative
+    write orders all land bit-identical pages — and the per-slot f32 scale is
+    scattered beside it through the same drop sentinel."""
     new = dict(pages)
-    put = lambda buf, val: buf.at[slot_mapping].set(
-        val.astype(buf.dtype), mode="drop")
-    new["k_e"] = put(pages["k_e"], k_e_new)
+    quantized = "k_e_scale" in pages
+
+    def put(name, val):
+        buf = pages[name]
+        if quantized:
+            q, s = quant.quantize_rows(val)
+            new[name] = buf.at[slot_mapping].set(q, mode="drop")
+            new[name + "_scale"] = pages[name + "_scale"].at[
+                slot_mapping].set(s, mode="drop")
+        else:
+            new[name] = buf.at[slot_mapping].set(
+                val.astype(buf.dtype), mode="drop")
+
+    put("k_e", k_e_new)
     if "c" in pages:
-        new["c"] = put(pages["c"], c_k_new)
+        put("c", c_k_new)
     else:
-        new["c_k"] = put(pages["c_k"], c_k_new)
-        new["c_v"] = put(pages["c_v"], c_v_new)
+        put("c_k", c_k_new)
+        put("c_v", c_v_new)
     return new
 
 
@@ -259,6 +277,16 @@ def _page_latents(pages):
     if "c" in pages:
         return pages["c"], pages["c"]
     return pages["c_k"], pages["c_v"]
+
+
+def _page_scales(pages):
+    """Per-slot quantization scales ``(k_e, c_k, c_v)`` — None for an
+    unquantized (f32) pool.  J-LRD shares one latent scale for both roles."""
+    if "k_e_scale" not in pages:
+        return None
+    if "c" in pages:
+        return pages["k_e_scale"], pages["c_scale"], pages["c_scale"]
+    return pages["k_e_scale"], pages["c_k_scale"], pages["c_v_scale"]
 
 
 def _gather_prefix(pages, params, cfg, block_tables, block_size: int, dt):
@@ -280,6 +308,14 @@ def _gather_prefix(pages, params, cfg, block_tables, block_size: int, dt):
     k_e_pre = gather(pages["k_e"]).astype(dt)                # [B,P,nkv,2r]
     c_k_pre, c_v_pre = _page_latents(pages)
     c_k_pre, c_v_pre = gather(c_k_pre).astype(dt), gather(c_v_pre).astype(dt)
+    scales = _page_scales(pages)
+    if scales is not None:
+        # int8 pool: dequantize the gathered prefix rows before up-projecting
+        # (one multiply by the per-slot scale — core/quant.py)
+        ks, cks, cvs = (gather(s).astype(dt) for s in scales)    # [B,P] each
+        k_e_pre = k_e_pre * ks[..., None, None]
+        c_k_pre = c_k_pre * cks[..., None]
+        c_v_pre = c_v_pre * cvs[..., None]
     k_ne_pre = jnp.einsum("bsc,che->bshe", c_k_pre, params["bk"].astype(dt))
     v_pre = jnp.einsum("bsc,che->bshe", c_v_pre, params["bv"].astype(dt))
     return jnp.concatenate([k_e_pre, k_ne_pre], axis=-1), v_pre
@@ -338,6 +374,21 @@ def apply_prefill_paged(params, cfg, buffers, x, positions, pages,
     q, k, v, k_e, c_k, c_v = _materialized(params, cfg, buffers, x, positions,
                                            constrain)
     B, S = x.shape[:2]
+    if "k_e_scale" in pages:
+        # int8 pool: in-chunk attention must see exactly what a later pool
+        # read will dequantize, so round-trip the current chunk's streams
+        # before rebuilding K/V — otherwise chunked and one-shot prefill
+        # attend over different keys and the golden invariants break
+        # (core/quant.py, tests/test_quant.py).  The scatter below still
+        # quantizes the RAW streams — the canonical pool content.
+        dt = x.dtype
+        k_e_rt = quant.roundtrip_rows(k_e, batch_dims=2)
+        c_k_rt = quant.roundtrip_rows(c_k, batch_dims=2)
+        c_v_rt = quant.roundtrip_rows(c_v, batch_dims=2)
+        k_ne = jnp.einsum("bsc,che->bshe", c_k_rt, params["bk"].astype(dt))
+        v = constrain("attn_kv", jnp.einsum("bsc,che->bshe", c_v_rt,
+                                            params["bv"].astype(dt)))
+        k = constrain("attn_kv", jnp.concatenate([k_e_rt, k_ne], axis=-1))
     new_pages = _scatter_pages(
         pages, k_e.reshape(B * S, *k_e.shape[2:]),
         c_k.reshape(B * S, -1), c_v.reshape(B * S, -1),
@@ -398,10 +449,17 @@ def apply_verify_paged(params, cfg, buffers, x, pages, slot_mapping,
 
     from repro.kernels import ops as kops
     K_e, (C_k, C_v) = new_pages["k_e"], _page_latents(new_pages)
-    o = kops.elite_verify_paged(
-        q_e, q_lat, K_e, C_k, C_v, block_tables, q_offsets, lengths,
-        q_group=G, scale=dh ** -0.5, block_size=block_size,
-        force_xla=not use_kernel)
+    scales = _page_scales(new_pages)
+    if scales is None:
+        o = kops.elite_verify_paged(
+            q_e, q_lat, K_e, C_k, C_v, block_tables, q_offsets, lengths,
+            q_group=G, scale=dh ** -0.5, block_size=block_size,
+            force_xla=not use_kernel)
+    else:
+        o = kops.elite_verify_paged_q8(
+            q_e, q_lat, K_e, C_k, C_v, *scales, block_tables, q_offsets,
+            lengths, q_group=G, scale=dh ** -0.5, block_size=block_size,
+            force_xla=not use_kernel)
     o = o.astype(dt)                                         # [B,W,nh,d_c]
 
     bv_q = rope_lib.expand_kv_to_q(jnp.moveaxis(params["bv"], 1, 0), G)
@@ -439,10 +497,17 @@ def apply_decode_paged(params, cfg, buffers, x, pages, slot_mapping,
 
     from repro.kernels import ops as kops
     K_e, (C_k, C_v) = new_pages["k_e"], _page_latents(new_pages)
-    o = kops.elite_decode_paged(
-        q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k, C_v,
-        block_tables, lengths, q_group=G, scale=dh ** -0.5,
-        block_size=block_size, force_xla=not use_kernel)
+    scales = _page_scales(new_pages)
+    if scales is None:
+        o = kops.elite_decode_paged(
+            q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k, C_v,
+            block_tables, lengths, q_group=G, scale=dh ** -0.5,
+            block_size=block_size, force_xla=not use_kernel)
+    else:
+        o = kops.elite_decode_paged_q8(
+            q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k, C_v,
+            *scales, block_tables, lengths, q_group=G, scale=dh ** -0.5,
+            block_size=block_size, force_xla=not use_kernel)
     o = o.reshape(B, 1, nh, C_v.shape[-1]).astype(dt)
 
     bv_q = rope_lib.expand_kv_to_q(jnp.moveaxis(params["bv"], 1, 0), G)

@@ -1,0 +1,87 @@
+"""Symmetric int8 quantization for the paged latent pool (docs/serving.md).
+
+The pool stores the compressed ``(k_e, c_kv)`` streams; quantizing them to
+int8 halves-to-quarters the bytes per token on top of EliteKV's structural
+reduction (ROADMAP "Quantized latent pool").  The scheme is deliberately the
+simplest one whose representation depends ONLY on the token's values:
+
+* **per-token rows** — one f32 scale per pool slot per stream, absmax over
+  every trailing dim of that token's row.  Per-*block* scales would make a
+  block's contents depend on which tokens shared it and in what order they
+  arrived (an incremental scatter into a half-full block either requantizes
+  neighbours or freezes a chunk-boundary-dependent scale), which would break
+  the golden invariants (chunked == one-shot, preempted == undisturbed).
+  Per-token scales make quantization a pure function of the token row, so
+  every existing identity survives the dtype bit-exactly.
+* **symmetric absmax** — ``scale = max(absmax, eps) / 127``;
+  ``q = round(x / scale)`` never needs the clip (|x|/scale <= 127 by
+  construction; the clip only guards float rounding).  Scales are strictly
+  positive even for all-zero rows, and the round-trip error is bounded
+  elementwise by ``scale / 2`` (tests/test_property.py pins both).
+
+Dequantization is one multiply — ``q.astype(f32) * scale`` — cheap enough to
+fuse into the Pallas decode/verify kernels' block-table walk
+(``kernels/elite_decode.py``) and the resumed-chunk prefix gather
+(``core/elite_attention.py``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: symmetric int8 range: q in [-127, 127] (the -128 code is never produced)
+INT8_MAX = 127
+#: absmax floor so all-zero / denormal rows still get a strictly positive
+#: scale (q = 0 exactly, round-trip error 0)
+SCALE_EPS = 1e-8
+
+
+def quantize_rows(x):
+    """Quantize ``x [N, ...]`` row-wise → ``(q int8 [N, ...], scale f32 [N])``.
+
+    One scale per leading-axis row, absmax over all trailing dims.  A pure
+    function of each row — no cross-row or history dependence (the property
+    the serving invariants rely on; see module docstring).
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    trailing = tuple(range(1, xf.ndim))
+    absmax = jnp.max(jnp.abs(xf), axis=trailing) if trailing \
+        else jnp.abs(xf)
+    scale = jnp.maximum(absmax, SCALE_EPS) / INT8_MAX
+    s = scale.reshape(scale.shape + (1,) * len(trailing))
+    q = jnp.clip(jnp.round(xf / s), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q, scale):
+    """Invert :func:`quantize_rows`: ``q int8 [N, ...] * scale [N] → f32``.
+
+    ``scale`` broadcasts over the trailing dims of ``q``; accepts any
+    leading shape as long as ``scale.shape == q.shape[:scale.ndim]``.
+    """
+    q = jnp.asarray(q)
+    s = jnp.asarray(scale, jnp.float32)
+    return q.astype(jnp.float32) * s.reshape(s.shape + (1,) * (q.ndim - s.ndim))
+
+
+def roundtrip_rows(x, batch_dims: int = 1):
+    """Quantize → dequantize each token row of ``x`` (leading ``batch_dims``
+    axes index rows; the rest is the row).  Returns ``x``'s dtype/shape.
+
+    Prefill attention over a quantized pool runs this on the *current*
+    chunk's streams so in-chunk attention sees exactly the values any later
+    pool read will dequantize — without it, chunked and one-shot prefill
+    would attend over different keys and the golden invariants
+    (tests/test_quant.py) would only hold approximately.
+    """
+    flat = x.reshape((-1,) + x.shape[batch_dims:])
+    q, s = quantize_rows(flat)
+    return dequantize(q, s).reshape(x.shape).astype(x.dtype)
+
+
+def is_int8(dtype) -> bool:
+    """True when ``dtype`` names the quantized pool mode (``"int8"`` string
+    or any int8 dtype object)."""
+    try:
+        return jnp.dtype(dtype) == jnp.int8
+    except TypeError:
+        return False

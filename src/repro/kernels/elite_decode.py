@@ -247,6 +247,139 @@ def elite_decode_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
 
 
 # ---------------------------------------------------------------------------
+# paged decode over an int8 pool: fused in-register dequantization
+# ---------------------------------------------------------------------------
+
+def _paged_kernel_q8(block_tables_ref,        # scalar-prefetch [B, mb] int32
+                     lengths_ref,             # scalar-prefetch [B] int32
+                     q_e_ref, q_lat_ref, k_e_ref, c_k_ref, c_v_ref,
+                     k_s_ref, ck_s_ref, cv_s_ref,
+                     o_ref,
+                     acc_ref, m_ref, l_ref,
+                     *, block_size: int, scale: float, max_blocks: int):
+    """``_paged_kernel`` over int8 pages: the same block-table walk also pulls
+    each page's per-slot f32 scales, and every stream is dequantized
+    in-register (``int8 → f32 · scale``) right after the load — the HBM read
+    stays one byte per element, the math stays f32."""
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    start = sb * block_size
+
+    @pl.when(start < length)
+    def _step():
+        q_e = q_e_ref[0, 0]                           # [G, 2r]
+        q_lat = q_lat_ref[0, 0]                       # [G, d_c]
+        k_s = k_s_ref[0]                              # [block_size]
+        ck_s = ck_s_ref[0]
+        k_e = k_e_ref[0, :, 0, :].astype(jnp.float32) \
+            * k_s[:, None]                            # [block_size, 2r]
+        c_k = c_k_ref[0].astype(jnp.float32) \
+            * ck_s[:, None]                           # [block_size, d_c]
+        s = jax.lax.dot_general(
+            q_e, k_e, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [G, block_size]
+        s += jax.lax.dot_general(
+            q_lat, c_k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s *= scale
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        c_v = c_v_ref[0].astype(jnp.float32) * cv_s_ref[0][:, None]
+        pv = jax.lax.dot_general(
+            p, c_v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [G, d_c]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(sb == max_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def elite_decode_paged_q8(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                          k_e_scale, c_k_scale, c_v_scale,
+                          block_tables, lengths, q_group: int, scale: float,
+                          block_size: int, interpret: bool = False):
+    """See kernels/ref.py::elite_decode_paged_q8_ref for exact semantics.
+
+    Pages as in ``elite_decode_paged`` but int8; ``*_scale`` [n_slots] f32
+    per-slot quantization scales.  Output is always f32 (the int8 pages must
+    never leak their dtype into the attention output).
+    """
+    B, nh, r2 = q_e.shape
+    nkv = k_e_pages.shape[1]
+    d_c = c_k_pages.shape[-1]
+    G = q_group
+    assert nh == nkv * G, (nh, nkv, G)
+    assert k_e_pages.shape[0] % block_size == 0, (k_e_pages.shape, block_size)
+    n_blocks_pool = k_e_pages.shape[0] // block_size
+    mb = block_tables.shape[1]
+    assert block_tables.shape == (B, mb) and lengths.shape == (B,)
+
+    q_e_g = q_e.astype(jnp.float32).reshape(B, nkv, G, r2)
+    q_lat_g = q_lat.astype(jnp.float32).reshape(B, nkv, G, d_c)
+    k_e_p = k_e_pages.reshape(n_blocks_pool, block_size, nkv, r2)
+    c_k_p = c_k_pages.reshape(n_blocks_pool, block_size, d_c)
+    c_v_p = c_v_pages.reshape(n_blocks_pool, block_size, d_c)
+    k_s_p = k_e_scale.reshape(n_blocks_pool, block_size)
+    ck_s_p = c_k_scale.reshape(n_blocks_pool, block_size)
+    cv_s_p = c_v_scale.reshape(n_blocks_pool, block_size)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel_q8, block_size=block_size,
+                          scale=scale, max_blocks=mb),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nkv, mb),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, r2), lambda b, h, s, bt, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, d_c), lambda b, h, s, bt, L: (b, h, 0, 0)),
+                # int8 pool pages + their per-slot scales, all indexed through
+                # the same prefetched block table (one walk, two reads/page)
+                pl.BlockSpec((1, block_size, 1, r2),
+                             lambda b, h, s, bt, L: (bt[b, s], 0, h, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, bt, L: (bt[b, s], 0, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, bt, L: (bt[b, s], 0, 0)),
+                pl.BlockSpec((1, block_size),
+                             lambda b, h, s, bt, L: (bt[b, s], 0)),
+                pl.BlockSpec((1, block_size),
+                             lambda b, h, s, bt, L: (bt[b, s], 0)),
+                pl.BlockSpec((1, block_size),
+                             lambda b, h, s, bt, L: (bt[b, s], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, d_c), lambda b, h, s, bt, L: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, d_c), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nkv, G, d_c), jnp.float32),
+        interpret=interpret,
+        name="elite_decode_paged_q8",
+    )(block_tables, lengths, q_e_g, q_lat_g, k_e_p, c_k_p, c_v_p,
+      k_s_p, ck_s_p, cv_s_p)
+    return out.reshape(B, nh, d_c)
+
+
+# ---------------------------------------------------------------------------
 # paged verify: k+1-token speculative windows, multi-query over the block table
 # ---------------------------------------------------------------------------
 
@@ -376,6 +509,141 @@ def elite_verify_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
         .reshape(B, W, nh, d_c)
 
 
+def _verify_kernel_q8(block_tables_ref,       # scalar-prefetch [B, mb] int32
+                      q_offsets_ref,          # scalar-prefetch [B] int32
+                      lengths_ref,            # scalar-prefetch [B] int32
+                      q_e_ref, q_lat_ref, k_e_ref, c_k_ref, c_v_ref,
+                      k_s_ref, ck_s_ref, cv_s_ref,
+                      o_ref,
+                      acc_ref, m_ref, l_ref,
+                      *, block_size: int, scale: float, max_blocks: int,
+                      q_group: int):
+    """``_verify_kernel`` over int8 pages with fused in-register dequant —
+    same W·G query-row layout and offset-causal mask, same per-slot scale
+    loads as ``_paged_kernel_q8``."""
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    q_offset = q_offsets_ref[b]
+    start = sb * block_size
+
+    @pl.when(start < length)
+    def _step():
+        q_e = q_e_ref[0, 0]                           # [W·G, 2r]
+        q_lat = q_lat_ref[0, 0]                       # [W·G, d_c]
+        k_e = k_e_ref[0, :, 0, :].astype(jnp.float32) \
+            * k_s_ref[0][:, None]                     # [block_size, 2r]
+        c_k = c_k_ref[0].astype(jnp.float32) \
+            * ck_s_ref[0][:, None]                    # [block_size, d_c]
+        s = jax.lax.dot_general(
+            q_e, k_e, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [W·G, block_size]
+        s += jax.lax.dot_general(
+            q_lat, c_k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s *= scale
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qw = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // q_group
+        s = jnp.where((pos <= q_offset + qw) & (pos < length), s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        c_v = c_v_ref[0].astype(jnp.float32) * cv_s_ref[0][:, None]
+        pv = jax.lax.dot_general(
+            p, c_v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [W·G, d_c]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(sb == max_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def elite_verify_paged_q8(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                          k_e_scale, c_k_scale, c_v_scale,
+                          block_tables, q_offsets, lengths, q_group: int,
+                          scale: float, block_size: int,
+                          interpret: bool = False):
+    """See kernels/ref.py::elite_verify_paged_q8_ref for exact semantics.
+
+    ``elite_verify_paged`` over int8 pages + per-slot f32 scales; output is
+    always f32.
+    """
+    B, W, nh, r2 = q_e.shape
+    nkv = k_e_pages.shape[1]
+    d_c = c_k_pages.shape[-1]
+    G = q_group
+    assert nh == nkv * G, (nh, nkv, G)
+    assert k_e_pages.shape[0] % block_size == 0, (k_e_pages.shape, block_size)
+    n_blocks_pool = k_e_pages.shape[0] // block_size
+    mb = block_tables.shape[1]
+    assert block_tables.shape == (B, mb)
+    assert q_offsets.shape == (B,) and lengths.shape == (B,)
+
+    q_e_g = q_e.astype(jnp.float32).reshape(B, W, nkv, G, r2) \
+        .transpose(0, 2, 1, 3, 4).reshape(B, nkv, W * G, r2)
+    q_lat_g = q_lat.astype(jnp.float32).reshape(B, W, nkv, G, d_c) \
+        .transpose(0, 2, 1, 3, 4).reshape(B, nkv, W * G, d_c)
+    k_e_p = k_e_pages.reshape(n_blocks_pool, block_size, nkv, r2)
+    c_k_p = c_k_pages.reshape(n_blocks_pool, block_size, d_c)
+    c_v_p = c_v_pages.reshape(n_blocks_pool, block_size, d_c)
+    k_s_p = k_e_scale.reshape(n_blocks_pool, block_size)
+    ck_s_p = c_k_scale.reshape(n_blocks_pool, block_size)
+    cv_s_p = c_v_scale.reshape(n_blocks_pool, block_size)
+
+    out = pl.pallas_call(
+        functools.partial(_verify_kernel_q8, block_size=block_size,
+                          scale=scale, max_blocks=mb, q_group=G),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, nkv, mb),
+            in_specs=[
+                pl.BlockSpec((1, 1, W * G, r2),
+                             lambda b, h, s, bt, off, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, W * G, d_c),
+                             lambda b, h, s, bt, off, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_size, 1, r2),
+                             lambda b, h, s, bt, off, L: (bt[b, s], 0, h, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, bt, off, L: (bt[b, s], 0, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, bt, off, L: (bt[b, s], 0, 0)),
+                pl.BlockSpec((1, block_size),
+                             lambda b, h, s, bt, off, L: (bt[b, s], 0)),
+                pl.BlockSpec((1, block_size),
+                             lambda b, h, s, bt, off, L: (bt[b, s], 0)),
+                pl.BlockSpec((1, block_size),
+                             lambda b, h, s, bt, off, L: (bt[b, s], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, W * G, d_c),
+                                   lambda b, h, s, bt, off, L: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((W * G, d_c), jnp.float32),
+                pltpu.VMEM((W * G, 1), jnp.float32),
+                pltpu.VMEM((W * G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nkv, W * G, d_c), jnp.float32),
+        interpret=interpret,
+        name="elite_verify_paged_q8",
+    )(block_tables, q_offsets, lengths, q_e_g, q_lat_g, k_e_p, c_k_p, c_v_p,
+      k_s_p, ck_s_p, cv_s_p)
+    return out.reshape(B, nkv, W, G, d_c).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, W, nh, d_c)
+
+
 def elite_verify_paged_xla(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
                            block_tables, q_offsets, lengths, q_group: int,
                            scale: float, block_size: int):
@@ -399,3 +667,28 @@ def elite_decode_paged_xla(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
     return elite_decode_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
                                   block_tables, lengths, q_group, scale,
                                   block_size)
+
+
+def elite_decode_paged_q8_xla(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                              k_e_scale, c_k_scale, c_v_scale,
+                              block_tables, lengths, q_group: int,
+                              scale: float, block_size: int):
+    """XLA fallback for the int8 paged decode kernel: dequantize the pool
+    (one multiply) then the gather-based f32 fallback — exact oracle match."""
+    from repro.kernels.ref import elite_decode_paged_q8_ref
+    return elite_decode_paged_q8_ref(q_e, q_lat, k_e_pages, c_k_pages,
+                                     c_v_pages, k_e_scale, c_k_scale,
+                                     c_v_scale, block_tables, lengths,
+                                     q_group, scale, block_size)
+
+
+def elite_verify_paged_q8_xla(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                              k_e_scale, c_k_scale, c_v_scale,
+                              block_tables, q_offsets, lengths, q_group: int,
+                              scale: float, block_size: int):
+    """XLA fallback for the int8 paged verify kernel."""
+    from repro.kernels.ref import elite_verify_paged_q8_ref
+    return elite_verify_paged_q8_ref(q_e, q_lat, k_e_pages, c_k_pages,
+                                     c_v_pages, k_e_scale, c_k_scale,
+                                     c_v_scale, block_tables, q_offsets,
+                                     lengths, q_group, scale, block_size)

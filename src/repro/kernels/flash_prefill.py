@@ -24,7 +24,10 @@ each lane's padded key tail (keys at ``kpos >= kv_lens[b]`` are invisible).
 NOTE: the paged serving loop currently resumes chunks through the XLA gather
 path (``elite_attention._attend_resumed``); wiring this kernel to the paged
 prefix via a contiguous gather scratch is the TPU follow-up tracked in
-ROADMAP.md.
+ROADMAP.md.  With an int8 pool (``--pool-dtype int8``) that prefix gather
+dequantizes each slot by its stored scale (``core/quant.py``) before the
+bk/bv up-projection, so this kernel always sees f32/bf16 inputs — the
+quantized representation never crosses the materialized-K/V boundary.
 
 The same per-lane offset-causal contract powers speculative decode's verify
 windows: a ``k+1``-token window is a resumed chunk whose queries sit at

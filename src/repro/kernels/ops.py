@@ -107,6 +107,48 @@ def elite_decode_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
 
 @functools.partial(jax.jit,
                    static_argnames=("q_group", "scale", "block_size", "force_xla"))
+def _elite_decode_paged_q8_jit(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                               k_e_scale, c_k_scale, c_v_scale,
+                               block_tables, lengths, q_group: int,
+                               scale: float, block_size: int,
+                               force_xla: bool = False):
+    if force_xla or _interpret():
+        return _ed.elite_decode_paged_q8_xla(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale,
+            c_k_scale, c_v_scale, block_tables, lengths, q_group, scale,
+            block_size)
+    return _ed.elite_decode_paged_q8(
+        q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale, c_k_scale,
+        c_v_scale, block_tables, lengths, q_group, scale, block_size,
+        interpret=False)
+
+
+def elite_decode_paged_q8(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                          k_e_scale, c_k_scale, c_v_scale,
+                          block_tables, lengths, q_group: int, scale: float,
+                          block_size: int, force_xla: bool = False):
+    """``elite_decode_paged`` over an int8 pool: the same block-table walk
+    also loads each slot's f32 quantization scale and dequantizes in-register
+    (core/quant.py).  Output is f32 regardless of page dtype.
+
+    TPU: fused Pallas kernel.  CPU / ``force_xla``: dequantize-then-gather
+    XLA fallback with identical semantics.
+    """
+    sp = _span("elite_decode_paged_q8", q_e)
+    if sp is None:
+        return _elite_decode_paged_q8_jit(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale,
+            c_k_scale, c_v_scale, block_tables, lengths, q_group, scale,
+            block_size, force_xla)
+    with sp:
+        return jax.block_until_ready(_elite_decode_paged_q8_jit(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale,
+            c_k_scale, c_v_scale, block_tables, lengths, q_group, scale,
+            block_size, force_xla))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("q_group", "scale", "block_size", "force_xla"))
 def _elite_verify_paged_jit(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
                             block_tables, q_offsets, lengths, q_group: int,
                             scale: float, block_size: int,
@@ -144,6 +186,45 @@ def elite_verify_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
         return jax.block_until_ready(_elite_verify_paged_jit(
             q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, block_tables,
             q_offsets, lengths, q_group, scale, block_size, force_xla))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("q_group", "scale", "block_size", "force_xla"))
+def _elite_verify_paged_q8_jit(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                               k_e_scale, c_k_scale, c_v_scale,
+                               block_tables, q_offsets, lengths, q_group: int,
+                               scale: float, block_size: int,
+                               force_xla: bool = False):
+    if force_xla or _interpret():
+        return _ed.elite_verify_paged_q8_xla(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale,
+            c_k_scale, c_v_scale, block_tables, q_offsets, lengths, q_group,
+            scale, block_size)
+    return _ed.elite_verify_paged_q8(
+        q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale, c_k_scale,
+        c_v_scale, block_tables, q_offsets, lengths, q_group, scale,
+        block_size, interpret=False)
+
+
+def elite_verify_paged_q8(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                          k_e_scale, c_k_scale, c_v_scale,
+                          block_tables, q_offsets, lengths, q_group: int,
+                          scale: float, block_size: int,
+                          force_xla: bool = False):
+    """``elite_verify_paged`` over an int8 pool with fused in-register
+    dequant — the speculative verify analogue of ``elite_decode_paged_q8``;
+    output is f32 regardless of page dtype."""
+    sp = _span("elite_verify_paged_q8", q_e)
+    if sp is None:
+        return _elite_verify_paged_q8_jit(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale,
+            c_k_scale, c_v_scale, block_tables, q_offsets, lengths, q_group,
+            scale, block_size, force_xla)
+    with sp:
+        return jax.block_until_ready(_elite_verify_paged_q8_jit(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale,
+            c_k_scale, c_v_scale, block_tables, q_offsets, lengths, q_group,
+            scale, block_size, force_xla))
 
 
 @functools.partial(jax.jit, static_argnames=("q_group", "scale", "block_q",

@@ -112,6 +112,42 @@ def elite_verify_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
                             scale)
 
 
+def dequantize_pages(k_e_pages, c_k_pages, c_v_pages,
+                     k_e_scale, c_k_scale, c_v_scale):
+    """Expand an int8 pool's streams to f32: ``row * per_slot_scale``
+    (core/quant.py).  Pages [n_slots, ...], scales [n_slots] f32."""
+    from repro.core.quant import dequantize
+    return (dequantize(k_e_pages, k_e_scale),
+            dequantize(c_k_pages, c_k_scale),
+            dequantize(c_v_pages, c_v_scale))
+
+
+def elite_decode_paged_q8_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                              k_e_scale, c_k_scale, c_v_scale,
+                              block_tables, lengths, q_group: int,
+                              scale: float, block_size: int) -> jnp.ndarray:
+    """Quantized-pool decode oracle: dequantize every slot, then the f32
+    paged oracle.  The Pallas q8 kernel must match THIS exactly — its fused
+    in-register dequant is algebraically the same multiply."""
+    k_e, c_k, c_v = dequantize_pages(k_e_pages, c_k_pages, c_v_pages,
+                                     k_e_scale, c_k_scale, c_v_scale)
+    return elite_decode_paged_ref(q_e, q_lat, k_e, c_k, c_v, block_tables,
+                                  lengths, q_group, scale, block_size)
+
+
+def elite_verify_paged_q8_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                              k_e_scale, c_k_scale, c_v_scale,
+                              block_tables, q_offsets, lengths, q_group: int,
+                              scale: float, block_size: int) -> jnp.ndarray:
+    """Quantized-pool verify oracle: dequantize, then the f32 paged verify
+    oracle (same contract as ``elite_decode_paged_q8_ref``)."""
+    k_e, c_k, c_v = dequantize_pages(k_e_pages, c_k_pages, c_v_pages,
+                                     k_e_scale, c_k_scale, c_v_scale)
+    return elite_verify_paged_ref(q_e, q_lat, k_e, c_k, c_v, block_tables,
+                                  q_offsets, lengths, q_group, scale,
+                                  block_size)
+
+
 def flash_prefill_ref(q, k, v, q_group: int, scale: float,
                       q_offset=0, kv_lens=None) -> jnp.ndarray:
     """Causal attention oracle.  q [B,Sq,nh,dh], k/v [B,Sk,nkv,dh] → [B,Sq,nh,dh].

@@ -51,7 +51,10 @@ the scheduler metrics line:
                                            mean lanes per prefill forward
 
 plus the pool accounting (live vs allocated bytes, block size, free blocks).
-docs/serving.md walks through every field.
+``--pool-dtype int8`` stores every pooled stream as symmetric-absmax int8
+rows with per-token f32 scales — the paged kernels dequantize in-register —
+roughly quartering bytes/token at a small quality cost (docs/serving.md has
+the parity/quality wall).  docs/serving.md walks through every field.
 
 Observability (docs/observability.md): ``--trace out.json`` records the run
 into a ring-buffer tracer and writes a Chrome trace-event timeline — open it
@@ -98,7 +101,8 @@ def serve_stream(params, buffers, cfg, args):
         prefill_batch_lanes=args.prefill_lanes,
         admission=args.admission, eviction=args.eviction,
         speculate_k=args.speculate, draft_rank=args.draft_rank,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache,
+        cache_dtype="int8" if args.pool_dtype == "int8" else jnp.float32)
     sched = serve_loop.Scheduler(params, buffers, cfg, scfg, tracer=tracer,
                                  metrics=REGISTRY)
     p_lo = min(4, args.prompt_len)          # sampling floors, valid even for
@@ -152,7 +156,9 @@ def serve_stream(params, buffers, cfg, args):
     print(f"pool: block_size={stats.block_size} blocks={stats.num_blocks} "
           f"high_water={report.pool_high_water_blocks} "
           f"free_after_drain={stats.blocks_free} "
-          f"allocated_bytes_peak={report.pool_high_water_blocks * stats.block_size * sched.pool.floats_per_token() * jnp.dtype(scfg.cache_dtype).itemsize / 2**20:.2f}MiB")
+          f"dtype={report.pool_dtype} "
+          f"bytes_per_token={report.pool_bytes_per_token} "
+          f"allocated_bytes_peak={report.pool_allocated_bytes_peak / 2**20:.2f}MiB")
     if report.block_reuse_ratio > 1.0:
         print(f"block reuse: peak {report.pool_high_water_blocks} blocks served "
               f"a workload whose naive footprint is {report.naive_blocks} "
@@ -211,6 +217,10 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common N-token system prefix to every "
                          "stream prompt (exercises --prefix-cache hits)")
+    ap.add_argument("--pool-dtype", choices=("f32", "int8"), default="f32",
+                    help="paged-pool page storage: f32, or int8 symmetric "
+                         "absmax quantization with per-token scales and "
+                         "fused in-kernel dequant (docs/serving.md)")
     ap.add_argument("--eviction", choices=("recompute", "swap"),
                     default="recompute",
                     help="preemption mechanism: recompute the evicted prefix "

@@ -248,7 +248,10 @@ class SchedulerConfig:
     prefix_cache: bool = False            # share prompt-prefix blocks across
                                           # requests (COW on divergence)
     use_kernel: bool = True               # Pallas paged kernel on TPU
-    cache_dtype: Any = jnp.float32
+    cache_dtype: Any = jnp.float32        # pool page dtype; "int8" switches
+                                          # the pool to symmetric absmax
+                                          # quantization with per-token scales
+                                          # (core/quant.py, docs/serving.md)
 
     @property
     def max_blocks_per_seq(self) -> int:
@@ -420,6 +423,10 @@ class ServeReport:
     peak_slots: int = 0
     pool_high_water_blocks: int = 0
     pool_block_size: int = 0
+    pool_dtype: str = "float32"           # page storage dtype ("int8" = quantized)
+    pool_bytes_per_token: int = 0         # device bytes per pooled token (all
+                                          # layers + streams, incl. scales)
+    pool_allocated_bytes_peak: int = 0    # bytes at the block high-water mark
     naive_blocks: int = 0                 # Σ per-request worst-case blocks
     block_reuse_ratio: float = 0.0        # naive / high-water (>1 ⇒ paging won)
     admission: str = "preempt"            # policy the run used
@@ -479,6 +486,10 @@ class ServeReport:
             pc = (f" pc[hit={self.prefix_cache_hit_rate:.2f} "
                   f"tok={self.prefix_cache_hit_tokens} "
                   f"cow={self.cow_copies}]")
+        q8 = ""
+        if self.pool_dtype not in ("float32", ""):
+            q8 = (f" pool[{self.pool_dtype} "
+                  f"{self.pool_bytes_per_token}B/tok]")
         return (f"completed={self.completed} steps={self.decode_steps} "
                 f"decoded={self.decoded_tokens} tok/s={self.tok_per_s:.1f} "
                 f"ttft_steps={self.ttft_steps_mean:.1f}{bucket} "
@@ -490,7 +501,7 @@ class ServeReport:
                 f"occ={self.mean_occupancy:.2f} [{self.admission}] "
                 f"preempt={self.preemptions}"
                 f"(swap {self.swap_outs}/{self.swap_ins}) "
-                f"prefill_batch={self.mean_prefill_batch:.1f}{spec}{pc}")
+                f"prefill_batch={self.mean_prefill_batch:.1f}{spec}{pc}{q8}")
 
 
 class Scheduler:
@@ -577,6 +588,21 @@ class Scheduler:
         self._m_pc_cached = m.gauge(
             "serve_prefix_cache_blocks_cached",
             "physical blocks with a registered prefix-hash claim")
+        # pool family (always registered; a float pool reports quantized=0 so
+        # exported metric sets stay schema-stable for check_trace — same
+        # contract as the prefix-cache family above)
+        self._pool_bpt = self.pool.bytes_per_token()
+        self._m_pool_quantized = m.gauge(
+            "serve_pool_quantized",
+            "1 when the latent pool stores int8 rows + scales, else 0")
+        self._m_pool_bpt = m.gauge(
+            "serve_pool_bytes_per_token",
+            "device bytes per pooled token across all layers and streams")
+        self._m_pool_bytes = m.gauge(
+            "serve_pool_allocated_bytes",
+            "device bytes of pool blocks currently allocated to sequences")
+        self._m_pool_quantized.set(1 if self.pool.quantized else 0)
+        self._m_pool_bpt.set(self._pool_bpt)
         self._cow_synced = 0                # pool.cow_copies already metered
         # the draft shares params unless a real rank truncation is requested
         self.draft_params = (
@@ -1043,6 +1069,10 @@ class Scheduler:
         self._m_slots.set(len(occupied))
         self.trace.counter("pool_blocks_used", self.pool.allocator.num_used,
                            track="pool")
+        alloc_bytes = (self.pool.allocator.num_used * self.scfg.block_size
+                       * self._pool_bpt)
+        self._m_pool_bytes.set(alloc_bytes)
+        self.trace.counter("pool_allocated_bytes", alloc_bytes, track="pool")
         self.trace.counter("slots_occupied", len(occupied), track="scheduler")
         if self.bm.prefix is not None:
             if self.pool.cow_copies > self._cow_synced:
@@ -1372,6 +1402,10 @@ class Scheduler:
             step_ms_p95=pct(self._step_wall_ms, 95),
             peak_slots=self.peak_slots, pool_high_water_blocks=hw,
             pool_block_size=self.scfg.block_size,
+            pool_dtype=str(self.pool.dtype),
+            pool_bytes_per_token=self._pool_bpt,
+            pool_allocated_bytes_peak=hw * self.scfg.block_size
+            * self._pool_bpt,
             naive_blocks=self.naive_blocks,
             block_reuse_ratio=self.naive_blocks / max(hw, 1),
             admission=self.scfg.admission,

@@ -12,6 +12,18 @@ from repro.configs import get_config
 from repro.configs.base import EliteKVConfig
 
 
+def pytest_collection_modifyitems(config, items):
+    """Order-independence audit: ``REPRO_TEST_SHUFFLE=<seed>`` shuffles the
+    collected test order deterministically.  Works without pytest-randomly
+    (absent from the bare container); a shuffled run must pass identically
+    to the default order — any diff is a hidden inter-test dependency
+    (shared fixture mutation, module state, cache leakage)."""
+    seed = os.environ.get("REPRO_TEST_SHUFFLE")
+    if seed:
+        import random
+        random.Random(int(seed)).shuffle(items)
+
+
 @pytest.fixture(scope="session")
 def stress_blocks():
     """Pool-size override for serving-scheduler tests.  The CI serving-stress

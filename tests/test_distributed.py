@@ -115,6 +115,7 @@ _SUBPROC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_sharded_loss_matches_single_device(tmp_path):
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,

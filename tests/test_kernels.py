@@ -270,6 +270,138 @@ def test_verify_kernel_matches_model_attention(tiny_elite_cfg, tiny_elite_model)
                                atol=2e-4, rtol=2e-4)
 
 
+def _quantize_pool(k_e_p, c_k_p, c_v_p):
+    """Per-slot symmetric absmax int8 pool (core/quant.py layout)."""
+    from repro.core import quant
+    k_q, k_s = quant.quantize_rows(k_e_p)
+    ck_q, ck_s = quant.quantize_rows(c_k_p)
+    cv_q, cv_s = quant.quantize_rows(c_v_p)
+    return k_q, ck_q, cv_q, k_s, ck_s, cv_s
+
+
+@pytest.mark.parametrize("lens,bs", [
+    ([13, 3], 8),                  # lengths crossing block boundaries
+    ([16, 8], 8),                  # lengths exactly on block boundaries
+    ([11, 0], 4),                  # live lane + dead kv_len==0 lane
+])
+def test_elite_decode_paged_q8_kernel_vs_oracle(lens, bs):
+    """Fused-dequant paged decode vs the quantized oracle: the in-register
+    ``int8 * scale`` multiply must reproduce dequantize-then-attend exactly
+    (same matrix as the f32 kernel: boundary kv_lens, dead lanes)."""
+    B, nkv, G, r2, dc = 2, 2, 2, 4, 16
+    q_e, q_lat, k_e_p, c_p, bt = _verify_inputs(B, 1, nkv, G, r2, dc,
+                                                n_blocks=16, bs=bs, seed=13)
+    q_e, q_lat = q_e[:, 0], q_lat[:, 0]
+    k_q, ck_q, cv_q, k_s, ck_s, cv_s = _quantize_pool(k_e_p, c_p, c_p)
+    lens_a = jnp.asarray(lens, jnp.int32)
+    o_r = ref.elite_decode_paged_q8_ref(q_e, q_lat, k_q, ck_q, cv_q,
+                                        k_s, ck_s, cv_s, bt, lens_a,
+                                        G, 0.2, bs)
+    o_k = ed.elite_decode_paged_q8(q_e, q_lat, k_q, ck_q, cv_q,
+                                   k_s, ck_s, cv_s, bt, lens_a,
+                                   G, 0.2, bs, interpret=True)
+    assert o_k.dtype == jnp.float32        # int8 pages never leak their dtype
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=3e-5, rtol=3e-5)
+    for b in range(B):
+        if lens[b] == 0:
+            assert float(jnp.max(jnp.abs(o_k[b]))) == 0.0
+
+
+@pytest.mark.parametrize("W,offs,lens,bs", [
+    (3, [10, 0], [13, 3], 8),      # windows crossing block boundaries
+    (5, [6, 30], [11, 35], 8),     # off + W spans 2–3 blocks, uneven lanes
+    (2, [0, 0], [2, 0], 4),        # fresh lane + a dead kv_len==0 lane
+])
+def test_elite_verify_paged_q8_kernel_vs_oracle(W, offs, lens, bs):
+    """Quantized verify windows vs the quantized oracle — the exact f32
+    verify matrix re-run over an int8 pool with per-slot scales."""
+    B, nkv, G, r2, dc = 2, 2, 2, 4, 16
+    q_e, q_lat, k_e_p, c_p, bt = _verify_inputs(B, W, nkv, G, r2, dc,
+                                                n_blocks=16, bs=bs)
+    k_q, ck_q, cv_q, k_s, ck_s, cv_s = _quantize_pool(k_e_p, c_p, c_p)
+    offs_a = jnp.asarray(offs, jnp.int32)
+    lens_a = jnp.asarray(lens, jnp.int32)
+    o_r = ref.elite_verify_paged_q8_ref(q_e, q_lat, k_q, ck_q, cv_q,
+                                        k_s, ck_s, cv_s, bt, offs_a, lens_a,
+                                        G, 0.2, bs)
+    o_k = ed.elite_verify_paged_q8(q_e, q_lat, k_q, ck_q, cv_q,
+                                   k_s, ck_s, cv_s, bt, offs_a, lens_a,
+                                   G, 0.2, bs, interpret=True)
+    assert o_k.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=3e-5, rtol=3e-5)
+    for b in range(B):
+        if lens[b] == 0:
+            assert float(jnp.max(jnp.abs(o_k[b]))) == 0.0
+            assert float(jnp.max(jnp.abs(o_r[b]))) == 0.0
+
+
+def test_elite_verify_paged_q8_mixed_decode_lanes():
+    """Mixed verify/decode lanes over the int8 pool: a W=1-style decode lane
+    (row 0 at position length-1) inside a verify call must equal the
+    single-query q8 decode oracle — the scheduler's mixed-lane contract
+    holds under quantization."""
+    B, nkv, G, r2, dc, W, bs = 2, 2, 2, 4, 16, 3, 8
+    q_e, q_lat, k_e_p, c_p, bt = _verify_inputs(B, W, nkv, G, r2, dc,
+                                                n_blocks=16, bs=bs, seed=9)
+    k_q, ck_q, cv_q, k_s, ck_s, cv_s = _quantize_pool(k_e_p, c_p, c_p)
+    dec_len = 14
+    offs = jnp.asarray([dec_len - 1, 5], jnp.int32)
+    lens = jnp.asarray([dec_len, 5 + W], jnp.int32)
+    o_v = ed.elite_verify_paged_q8(q_e, q_lat, k_q, ck_q, cv_q,
+                                   k_s, ck_s, cv_s, bt, offs, lens,
+                                   G, 0.2, bs, interpret=True)
+    o_r = ref.elite_verify_paged_q8_ref(q_e, q_lat, k_q, ck_q, cv_q,
+                                        k_s, ck_s, cv_s, bt, offs, lens,
+                                        G, 0.2, bs)
+    np.testing.assert_allclose(np.asarray(o_v), np.asarray(o_r),
+                               atol=3e-5, rtol=3e-5)
+    o_d = ref.elite_decode_paged_q8_ref(q_e[:, 0], q_lat[:, 0], k_q, ck_q,
+                                        cv_q, k_s, ck_s, cv_s, bt,
+                                        jnp.asarray([dec_len, 0], jnp.int32),
+                                        G, 0.2, bs)
+    np.testing.assert_allclose(np.asarray(o_v[0, 0]), np.asarray(o_d[0]),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_elite_verify_paged_q8_w1_equals_decode():
+    """W=1 quantized verify ≡ quantized decode: the degenerate one-token
+    window must be the same computation through both fused-dequant kernels
+    (the contract plain decode and speculative verify share)."""
+    B, nkv, G, r2, dc, bs = 2, 2, 2, 4, 16, 8
+    q_e, q_lat, k_e_p, c_p, bt = _verify_inputs(B, 1, nkv, G, r2, dc,
+                                                n_blocks=16, bs=bs, seed=5)
+    k_q, ck_q, cv_q, k_s, ck_s, cv_s = _quantize_pool(k_e_p, c_p, c_p)
+    lens = jnp.asarray([13, 6], jnp.int32)
+    o_v = ed.elite_verify_paged_q8(q_e, q_lat, k_q, ck_q, cv_q,
+                                   k_s, ck_s, cv_s, bt, lens - 1, lens,
+                                   G, 0.2, bs, interpret=True)
+    o_d = ed.elite_decode_paged_q8(q_e[:, 0], q_lat[:, 0], k_q, ck_q, cv_q,
+                                   k_s, ck_s, cv_s, bt, lens,
+                                   G, 0.2, bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_v[:, 0]), np.asarray(o_d),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_q8_oracle_tracks_f32_oracle():
+    """Quality sanity at the kernel level: the quantized oracle's outputs
+    stay close to the f32 oracle over the same pool (int8 absmax keeps
+    ~2 decimal digits — the serving-level wall is tests/test_quant.py)."""
+    B, nkv, G, r2, dc, bs = 2, 2, 2, 4, 16, 8
+    q_e, q_lat, k_e_p, c_p, bt = _verify_inputs(B, 1, nkv, G, r2, dc,
+                                                n_blocks=16, bs=bs, seed=21)
+    q_e, q_lat = q_e[:, 0], q_lat[:, 0]
+    k_q, ck_q, cv_q, k_s, ck_s, cv_s = _quantize_pool(k_e_p, c_p, c_p)
+    lens = jnp.asarray([13, 9], jnp.int32)
+    o_f = ref.elite_decode_paged_ref(q_e, q_lat, k_e_p, c_p, c_p, bt, lens,
+                                     G, 0.2, bs)
+    o_q = ref.elite_decode_paged_q8_ref(q_e, q_lat, k_q, ck_q, cv_q,
+                                        k_s, ck_s, cv_s, bt, lens, G, 0.2, bs)
+    np.testing.assert_allclose(np.asarray(o_q), np.asarray(o_f),
+                               atol=5e-2, rtol=5e-2)
+
+
 @pytest.mark.parametrize("S,H,r,bs", [(64, 4, 4, 16), (32, 2, 8, 32), (128, 1, 2, 64)])
 def test_rope_elite_sweep(S, H, r, bs):
     key = jax.random.PRNGKey(2)

@@ -11,9 +11,15 @@ from repro.configs import get_config, list_archs, make_inputs
 from repro.models import lm
 
 ARCHS = list(list_archs())
+#: archs whose reduced config still takes >8s for a train step on CPU
+#: (--durations=15): their parametrized legs are deselectable via
+#: -m "not slow" (ARCHS itself stays a plain string list — tests iterate it)
+_SLOW_ARCHS = {"jamba_v0_1_52b"}
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS
+               else a for a in ARCHS]
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_step_smoke(arch):
     cfg = get_config(arch).reduced()
     params, buffers = lm.init(jax.random.PRNGKey(0), cfg)
@@ -33,8 +39,9 @@ def test_train_step_smoke(arch):
     assert jnp.isfinite(gn) and float(gn) > 0
 
 
-@pytest.mark.parametrize("arch", ["yi_6b", "qwen3_moe_235b", "falcon_mamba_7b",
-                                  "jamba_v0_1_52b", "musicgen_large"])
+@pytest.mark.parametrize("arch", [
+    "yi_6b", "qwen3_moe_235b", "falcon_mamba_7b",
+    pytest.param("jamba_v0_1_52b", marks=pytest.mark.slow), "musicgen_large"])
 def test_decode_step_smoke(arch):
     cfg = get_config(arch).reduced()
     params, buffers = lm.init(jax.random.PRNGKey(0), cfg)

@@ -93,6 +93,82 @@ def test_int8_quant_roundtrip_bound(seed, scale):
     assert float(err) <= 0.5 + 1e-3
 
 
+@given(seed=st.integers(0, 500),
+       magnitude=st.sampled_from([0.0, 1e-38, 1e-8, 1.0, 100.0, 1e18]),
+       rows=st.integers(1, 6), dim=st.sampled_from([1, 8, 33]))
+@_fast
+def test_pool_quant_roundtrip_bound_and_positive_scales(seed, magnitude, rows,
+                                                        dim):
+    """Pool quantization (core/quant.py): scales are strictly positive for
+    every row — including all-zero and denormal rows, where the absmax floor
+    kicks in — and the round-trip error is bounded elementwise by half a
+    quantization step (scale / 2)."""
+    from repro.core import quant
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, dim)) * magnitude
+    q, s = quant.quantize_rows(x)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    s_np = np.asarray(s)
+    assert s_np.shape == (rows,)
+    assert np.all(s_np > 0.0), "scales must be strictly positive"
+    assert int(np.max(np.abs(np.asarray(q, np.int32)))) <= quant.INT8_MAX
+    err = np.abs(np.asarray(quant.dequantize(q, s))
+                 - np.asarray(x, np.float32))
+    assert np.all(err <= s_np[:, None] * (0.5 + 1e-6))
+
+
+@given(length=st.integers(1, 20), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_int8_swap_roundtrip_byte_exact(length, seed):
+    """Host swap of an int8 pool restores the int8 codes AND the f32 scale
+    leaves byte-for-byte, even when the restored chain lands on different
+    physical blocks — the property the preemption golden invariant
+    (tests/test_quant.py) rides on."""
+    import dataclasses as dc
+    from repro.configs import get_config
+    from repro.configs.base import EliteKVConfig
+    from repro.core.cache import BlockManager, PagedKVPool
+    cfg = dc.replace(
+        get_config("tinyllama_1_1b").reduced(num_layers=2, vocab_size=64),
+        elitekv=EliteKVConfig(enabled=True, elite_r=2, d_ckv=8))
+    bs = 4
+    pool = PagedKVPool(cfg, num_blocks=8, block_size=bs, dtype="int8")
+    bm = BlockManager(pool)
+    pool.ensure_capacity(0, length)
+    rng = np.random.default_rng(seed)
+    slots = jnp.asarray(pool.flat_slots(0, np.arange(length)))
+    for p_key, layer in pool.pages.items():
+        pool.pages[p_key] = {
+            name: arr.at[:, slots].set(jnp.asarray(
+                rng.integers(-127, 128,
+                             (arr.shape[0], length) + arr.shape[2:])
+                if arr.dtype == jnp.int8 else
+                rng.uniform(1e-6, 2.0,
+                            (arr.shape[0], length) + arr.shape[2:]),
+                arr.dtype))
+            for name, arr in layer.items()}
+
+    def live(table):
+        flat = [b * bs + i for b in table for i in range(bs)][:length]
+        return {p: {n: np.asarray(a)[:, flat].copy()
+                    for n, a in layer.items()}
+                for p, layer in pool.pages.items()}
+
+    before = live(pool.block_table(0))
+    old_table = pool.block_table(0)
+    swapped = bm.preempt_swap_out(0, length)
+    assert any(a.dtype == np.int8 for s_ in swapped.streams.values()
+               for a in s_.values())
+    pool.ensure_capacity(99, 1)            # force a different chain
+    bm.swap_in(0, swapped)
+    if len(old_table) > 0:
+        assert pool.block_table(0) != old_table
+    after = live(pool.block_table(0))
+    for p in before:
+        for n in before[p]:
+            assert before[p][n].dtype == after[p][n].dtype
+            np.testing.assert_array_equal(before[p][n], after[p][n])
+
+
 @given(chunk=st.integers(1, 24), seed=st.integers(0, 100))
 @settings(max_examples=10, deadline=None)
 def test_ssm_scan_chunk_invariance(chunk, seed):
@@ -178,15 +254,18 @@ _BM_OPS = st.lists(
     min_size=1, max_size=40)
 
 
+@pytest.mark.parametrize("pool_dtype", ["float32", "int8"])
 @given(ops=_BM_OPS, num_blocks=st.integers(2, 8))
 @settings(max_examples=25, deadline=None)
-def test_block_manager_never_leaks_or_double_frees(ops, num_blocks):
+def test_block_manager_never_leaks_or_double_frees(ops, num_blocks,
+                                                   pool_dtype):
     """Arbitrary alloc/free/preempt(swap)/truncate interleavings on a tiny
     pool keep the allocator exactly conserved: free + owned == capacity,
     chains stay disjoint, no block is ever double-freed or leaked — even
     when operations bounce off ``OutOfBlocks``.  ``truncate`` is the
     speculative verify-window rollback: it must return exactly the tail
-    blocks the shorter chain no longer covers."""
+    blocks the shorter chain no longer covers.  Runs against both the f32
+    and the quantized int8 pool — block accounting must be dtype-blind."""
     import dataclasses as dc
     from repro.configs import get_config
     from repro.configs.base import EliteKVConfig
@@ -194,7 +273,8 @@ def test_block_manager_never_leaks_or_double_frees(ops, num_blocks):
     cfg = dc.replace(
         get_config("tinyllama_1_1b").reduced(num_layers=2, vocab_size=64),
         elitekv=EliteKVConfig(enabled=True, elite_r=2, d_ckv=8))
-    pool = PagedKVPool(cfg, num_blocks=num_blocks, block_size=4)
+    pool = PagedKVPool(cfg, num_blocks=num_blocks, block_size=4,
+                       dtype="int8" if pool_dtype == "int8" else jnp.float32)
     bm = BlockManager(pool)
     swapped = {}
 

@@ -1,0 +1,264 @@
+"""Int8 latent-pool quantization: the quality wall and the golden invariants.
+
+Quality tier: switching the pool to int8 must keep greedy paged-decode
+streams in top-1 agreement with the f32 pool above a pinned threshold, with
+a bounded per-position decode-logit MAE, while shrinking bytes/token well
+below the acceptance ceiling (docs/serving.md).
+
+Golden tier: every serving invariant the f32 pool ships with must also hold
+*within* the quantized world, each leg quantized-vs-quantized so the
+quantization error cancels and the streams must be BIT-identical —
+chunked == one-shot prefill, preemption (recompute and swap) == undisturbed,
+prefix-cache on == off, speculative == plain.  These hold because the int8
+representation is a pure function of each token row (per-token scales,
+core/quant.py) and in-chunk prefill attention round-trips its own streams.
+
+Mechanism tier: pool/report accounting (dtype, bytes/token, peak bytes) and
+scale-leaf existence in every layer's pages.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import PagedKVPool
+from repro.runtime import serve_loop
+
+#: pinned quality wall — teacher-forced per-position top-1 agreement of the
+#: int8 pool vs the f32 pool on the suite's tiny random-init model.  Forced
+#: (not free-running) because a single early argmax flip would otherwise
+#: diverge the context and corrupt every later comparison.  The tiny model's
+#: intrinsic per-position flip rate is ~1%, so the wall pins 0.95 with
+#: margin; the acceptance artifact (benchmarks/run.py ``pool_capacity_int8``)
+#: pins the headline >= 0.98 on its fixed benchmark seed.
+TOP1_AGREEMENT_MIN = 0.95
+#: f32-vs-int8 decode-logit mean absolute error ceiling on the tiny model
+LOGIT_MAE_MAX = 0.05
+#: bytes/token ceiling: int8 pool vs f32 pool (acceptance: <= 0.55x)
+BYTES_RATIO_MAX = 0.55
+
+
+def _workload(cfg, n_req=4, seed=3, temp=0.0, max_new=10, shared=0):
+    rng = np.random.default_rng(seed)
+    head = (rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
+            if shared else None)
+    reqs = []
+    for i in range(n_req):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(8, 18))).astype(np.int32)
+        if head is not None:
+            prompt = np.concatenate([head, prompt])
+        reqs.append(serve_loop.Request(
+            uid=i, prompt=prompt, max_new_tokens=max_new, arrival=i * 0.5,
+            temperature=temp, top_p=0.9, seed=11 + i))
+    return reqs
+
+
+def _run(params, buffers, cfg, workload, *, dtype="int8", num_blocks=64,
+         admission="preempt", eviction="recompute", chunk=4, max_slots=2,
+         spec_k=0, rank=0, prefix_cache=False, block_size=4):
+    scfg = serve_loop.SchedulerConfig(
+        max_slots=max_slots, block_size=block_size, num_blocks=num_blocks,
+        max_len=64, prefill_bucket=4, prefill_chunk_tokens=chunk,
+        admission=admission, eviction=eviction,
+        speculate_k=spec_k, draft_rank=rank, prefix_cache=prefix_cache,
+        cache_dtype=dtype)
+    sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+    report = sched.run(workload)
+    return {r.uid: list(r.generated) for r in sched.finished}, report, sched
+
+
+# ---------------------------------------------------------------------------
+# quality wall: int8 vs f32 (the one approximate comparison in this file)
+# ---------------------------------------------------------------------------
+
+def test_int8_top1_agreement_and_footprint(tiny_elite_cfg, tiny_elite_model):
+    """The headline trade: teacher-forced per-position argmax over the int8
+    pool agrees with the f32 pool above the pinned top-1 threshold while
+    bytes/token drop below the acceptance ceiling.  Both pools score the
+    IDENTICAL f32-greedy streams, so every position is an independent
+    comparison (free-running streams would compound one flip forever)."""
+    from repro.models import lm
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    B, P, new = 4, 16, 12
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                                 cfg.vocab_size, jnp.int32)
+
+    def gen(dtype):
+        scfg = serve_loop.SchedulerConfig(
+            max_slots=B, max_new_tokens=new, max_len=32, num_blocks=48,
+            block_size=8, cache_dtype=dtype)
+        return serve_loop.generate_paged(params, buffers, cfg, prompts, new,
+                                         scfg)
+
+    out_f, rep_f = gen(jnp.float32)
+    _, rep_q = gen("int8")
+    assert rep_q.pool_dtype == "int8" and rep_f.pool_dtype == "float32"
+    ratio = rep_q.pool_bytes_per_token / rep_f.pool_bytes_per_token
+    assert ratio <= BYTES_RATIO_MAX, ratio
+    assert rep_q.pool_allocated_bytes_peak < rep_f.pool_allocated_bytes_peak
+
+    full = jnp.concatenate([prompts, jnp.asarray(out_f)], axis=1)
+    n = int(full.shape[1])
+
+    def forced_logits(dtype):
+        pool = PagedKVPool(cfg, num_blocks=4 * B, block_size=8, dtype=dtype)
+        sms = []
+        for b in range(B):
+            pool.ensure_capacity(b, n)
+            sms.append(pool.prefill_slot_mapping(b, 0, n, n))
+        logits, _ = lm.apply_prefill_paged(
+            params, buffers, cfg, {"tokens": full}, pool.pages,
+            jnp.asarray(np.stack(sms)))
+        return np.asarray(logits, np.float32)[:, P - 1:n - 1]
+
+    l_f = forced_logits(jnp.float32)
+    l_q = forced_logits("int8")
+    # the metric is sound: f32 teacher-forcing reproduces its own stream
+    assert (l_f.argmax(-1) == np.asarray(out_f)).all()
+    agreement = float((l_f.argmax(-1) == l_q.argmax(-1)).mean())
+    assert agreement >= TOP1_AGREEMENT_MIN, agreement
+
+
+def test_int8_decode_logit_mae_bounded(tiny_elite_cfg, tiny_elite_model):
+    """Per-position decode logits over an int8 pool stay within a small MAE
+    of the f32 pool after an identical prefill — the quantization noise the
+    top-1 wall rides on is itself bounded."""
+    from repro.models import lm
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    bs, sp = 4, 11
+    prompt = (np.arange(sp) * 5 % cfg.vocab_size).astype(np.int32)
+
+    def decode_logits(dtype):
+        pool = PagedKVPool(cfg, num_blocks=16, block_size=bs, dtype=dtype)
+        pool.ensure_capacity(0, sp)
+        toks = np.zeros((1, 12), np.int32)
+        toks[0, :sp] = prompt
+        sm = pool.prefill_slot_mapping(0, 0, sp, 12)[None]
+        _, pool.pages = lm.apply_prefill_paged(
+            params, buffers, cfg, {"tokens": jnp.asarray(toks)}, pool.pages,
+            jnp.asarray(sm))
+        pool.ensure_capacity(0, sp + 1)
+        bt = jnp.asarray(pool.block_table_array([0], 8))
+        sm1 = jnp.asarray(pool.slot_mapping([0], [sp]))
+        logits, _ = lm.apply_decode_paged(
+            params, buffers, cfg, {"tokens": jnp.asarray([[17]], np.int32)},
+            pool.pages, sm1, bt, jnp.asarray([sp + 1], jnp.int32),
+            block_size=bs)
+        return np.asarray(logits[0, 0], np.float32)
+
+    l_f = decode_logits(jnp.float32)
+    l_q = decode_logits("int8")
+    mae = float(np.mean(np.abs(l_f - l_q)))
+    assert mae <= LOGIT_MAE_MAX, mae
+    # the wall is not vacuous: quantization really perturbs the logits
+    assert mae > 0.0
+
+
+# ---------------------------------------------------------------------------
+# golden invariants, quantized-vs-quantized (bit-identical streams)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("temp", [0.0, 0.8])
+def test_int8_chunked_equals_oneshot(tiny_elite_cfg, tiny_elite_model, temp):
+    """Chunked prefill over the int8 pool equals one-shot prefill token for
+    token: in-chunk attention round-trips its own streams, so every read —
+    same chunk, later chunk, or decode — sees identical dequantized values
+    regardless of chunk boundaries."""
+    params, buffers = tiny_elite_model
+    one, one_rep, _ = _run(params, buffers, tiny_elite_cfg,
+                           _workload(tiny_elite_cfg, temp=temp), chunk=0)
+    for chunk in (4, 6):
+        out, rep, _ = _run(params, buffers, tiny_elite_cfg,
+                           _workload(tiny_elite_cfg, temp=temp), chunk=chunk)
+        assert out == one
+        assert rep.completed == one_rep.completed == 4
+        assert rep.pool_dtype == "int8"
+
+
+@pytest.mark.parametrize("eviction", ["recompute", "swap"])
+def test_int8_preemption_invariant(tiny_elite_cfg, tiny_elite_model, eviction,
+                                   stress_blocks):
+    """Tiny int8 pool under forced preemption (recompute or host swap)
+    produces the identical streams as an ample undisturbed int8 pool —
+    requantizing a recomputed prefix is a pure function of the tokens, and
+    swap round-trips the int8 pages byte-exactly."""
+    params, buffers = tiny_elite_model
+    base, base_rep, _ = _run(params, buffers, tiny_elite_cfg,
+                             _workload(tiny_elite_cfg), num_blocks=64,
+                             admission="watermark")
+    assert base_rep.preemptions == 0
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg,
+                           _workload(tiny_elite_cfg),
+                           num_blocks=stress_blocks(9), eviction=eviction)
+    assert out == base
+    assert rep.preemptions > 0
+    if eviction == "swap":
+        assert rep.swap_outs > 0 and rep.swap_ins == rep.swap_outs
+    assert sched.pool.allocator.num_free == sched.pool.num_blocks
+
+
+def test_int8_prefix_cache_invariant(tiny_elite_cfg, tiny_elite_model):
+    """Prefix-cache hits over the int8 pool are invisible in the stream:
+    cached pages are bit-identical to what a re-prefill would have written
+    (quantization is content-addressed-friendly — pure per-token)."""
+    params, buffers = tiny_elite_model
+    wl = lambda: _workload(tiny_elite_cfg, shared=12, seed=7)
+    base, _, _ = _run(params, buffers, tiny_elite_cfg, wl(),
+                      prefix_cache=False)
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg, wl(),
+                           prefix_cache=True)
+    assert out == base
+    assert rep.prefix_cache_hits > 0 and rep.prefix_cache_hit_tokens > 0
+    retained = sched.bm.prefix.num_retained if sched.bm.prefix else 0
+    assert sched.pool.allocator.num_free + retained == sched.pool.num_blocks
+
+
+@pytest.mark.parametrize("spec_k", [2, 4])
+def test_int8_speculative_matches_plain(tiny_elite_cfg, tiny_elite_model,
+                                        spec_k, stress_blocks):
+    """Greedy self-speculative decode over the int8 pool is bit-identical to
+    plain int8 decode: draft and verify read the same quantized pages, and
+    rejected windows roll back by truncation (scales truncate with their
+    rows)."""
+    params, buffers = tiny_elite_model
+    nb = stress_blocks(64)
+    base, base_rep, _ = _run(params, buffers, tiny_elite_cfg,
+                             _workload(tiny_elite_cfg), num_blocks=nb)
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg,
+                           _workload(tiny_elite_cfg), num_blocks=nb,
+                           spec_k=spec_k)
+    assert out == base
+    assert rep.acceptance_rate == 1.0        # full-rank draft ≡ target
+    assert rep.decode_steps < base_rep.decode_steps
+    assert sched.pool.allocator.num_free == sched.pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# mechanism: pool accounting and scale leaves
+# ---------------------------------------------------------------------------
+
+def test_int8_pool_pages_and_stats(tiny_elite_cfg):
+    """Every layer's pages carry int8 streams plus f32 per-slot scale leaves,
+    and the stats/bytes accounting reflects the quantized layout."""
+    pool_f = PagedKVPool(tiny_elite_cfg, num_blocks=8, block_size=4)
+    pool_q = PagedKVPool(tiny_elite_cfg, num_blocks=8, block_size=4,
+                         dtype="int8")
+    assert pool_q.quantized and not pool_f.quantized
+    for layer in pool_q.pages.values():
+        assert layer["k_e"].dtype == jnp.int8
+        assert layer["k_e_scale"].dtype == jnp.float32
+        # leading n_super axis + flat slot axis, no per-feature dims
+        assert layer["k_e_scale"].shape == layer["k_e"].shape[:2]
+        latent = "c" if "c" in layer else "c_k"
+        assert layer[latent].dtype == jnp.int8
+        assert layer[latent + "_scale"].dtype == jnp.float32
+    assert all("_scale" not in k for layer in pool_f.pages.values()
+               for k in layer)
+    sf, sq = pool_f.stats(), pool_q.stats()
+    assert sq.dtype == "int8" and sf.dtype == "float32"
+    assert 0 < sq.bytes_per_token < sf.bytes_per_token
+    assert sq.bytes_per_token / sf.bytes_per_token <= BYTES_RATIO_MAX

@@ -72,6 +72,7 @@ def test_greedy_first_pick_is_bruteforce_argmin(tiny_cfg, tiny_model):
     np.testing.assert_array_equal(np.asarray(got)[:, 0], brute)
 
 
+@pytest.mark.slow
 def test_greedy_distance_decreases_with_r(tiny_cfg, tiny_model):
     params, buffers = tiny_model
     batch = make_inputs(tiny_cfg, 1, 16, "train", seed=9)

@@ -13,6 +13,7 @@ from repro.models import lm
 from repro.runtime import serve_loop
 
 
+@pytest.mark.slow
 def test_generate_matches_manual_greedy(tiny_elite_cfg, tiny_elite_model):
     params, buffers = tiny_elite_model
     cfg = tiny_elite_cfg

@@ -15,6 +15,10 @@ from repro.data.pipeline import DataConfig, PipelineState, TokenPipeline
 from repro.models import lm
 from repro.runtime import serve_loop, train_loop
 
+# the shared pipeline fixture trains three models (~20s setup); every test
+# here rides on it, so the whole module is the expensive leg
+pytestmark = pytest.mark.slow
+
 
 def _eval_loss(params, buffers, cfg, n_batches=4):
     """Held-out loss: same seed-0 Markov corpus, pipeline steps the training

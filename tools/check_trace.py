@@ -34,6 +34,10 @@ Metrics checks (Prometheus text exposition format):
   exports one of the six instruments must export them all) and
   self-consistent: zero hits cannot coexist with nonzero hit tokens,
   and no member may be negative
+* the ``serve_pool_*`` family is likewise all-or-nothing and
+  self-consistent: ``serve_pool_quantized`` must be exactly 0 or 1,
+  ``serve_pool_bytes_per_token`` must be positive, and no member may
+  be negative
 
 Exit status 0 and a one-line summary on success; every violation is
 printed and the exit status is 1.  CI's ``obs`` job runs this against a
@@ -67,6 +71,11 @@ _PC_FAMILY = ("serve_prefix_cache_hits_total",
               "serve_prefix_cache_cow_total",
               "serve_prefix_cache_blocks_retained",
               "serve_prefix_cache_blocks_cached")
+#: the complete serve_pool_* instrument family — all-or-nothing
+_POOL_FAMILY = ("serve_pool_blocks_used",
+                "serve_pool_quantized",
+                "serve_pool_bytes_per_token",
+                "serve_pool_allocated_bytes")
 _SAMPLE_RE = re.compile(
     r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
     r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)(?:\s+\d+)?$")
@@ -295,6 +304,26 @@ def check_metrics(path: Path) -> int:
         if pc_vals.get("serve_prefix_cache_hits_total") == 0 and \
                 pc_vals.get("serve_prefix_cache_hit_tokens_total", 0) > 0:
             err(f"{path}: hit_tokens_total > 0 with hits_total == 0")
+
+    # serve_pool_* family: all-or-nothing and self-consistent
+    pool_vals = {n: v for n, _, v in samples if n in _POOL_FAMILY}
+    for n in sorted(n for n, _, _ in samples
+                    if n.startswith("serve_pool_") and n not in _POOL_FAMILY):
+        err(f"{path}: unknown serve_pool_* instrument {n!r}")
+    if pool_vals:
+        for n in _POOL_FAMILY:
+            if n not in pool_vals:
+                err(f"{path}: serve_pool_* family incomplete — missing {n}")
+        for n, v in sorted(pool_vals.items()):
+            if v < 0:
+                err(f"{path}: {n} is negative ({v})")
+        q = pool_vals.get("serve_pool_quantized")
+        if q is not None and q not in (0.0, 1.0):
+            err(f"{path}: serve_pool_quantized must be 0 or 1, got {q}")
+        bpt = pool_vals.get("serve_pool_bytes_per_token")
+        if bpt is not None and bpt <= 0:
+            err(f"{path}: serve_pool_bytes_per_token must be positive, "
+                f"got {bpt}")
     return len(samples)
 
 
