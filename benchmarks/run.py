@@ -324,7 +324,10 @@ def shared_prefix_workload(vocab_size: int = 128, n: int = 10,
 #: ``BENCH_serving.json`` at the repo root (schema in docs/observability.md).
 #: v2: rows carry ``pool_dtype``/``pool_bytes_per_token``, plus the
 #: ``pool_capacity_*`` quantization scenario pair.
-SERVING_SCHEMA_VERSION = 2
+#: v3: multi-device ``sharded_dev*`` scaling rows — device_count/tp/dp,
+#: per-replica occupancy, pool bytes/token/device, and an asserted
+#: ``tokens_match_single_device`` (the sharded path is bit-preserving).
+SERVING_SCHEMA_VERSION = 3
 
 
 def _serving_row(scenario: str, rep, us: float, **extra):
@@ -605,6 +608,62 @@ def serving():
          f"peak_blocks_ratio={blocks_ratio:.3f};"
          f"top1_agreement={top1_agreement:.4f};"
          f"ppl_delta={ppl_q - ppl_f:+.4f}")
+
+    # multi-device scaling: tp head-shards absorbed attention inside a
+    # replica, dp adds independent router replicas (runtime/router.py).
+    # This process is pinned to ONE CPU device (conftest determinism), so
+    # each device count runs repro.runtime.sharded_check in a subprocess
+    # that forces its own host device count, all serving the identical
+    # deterministic greedy workload through chunked prefill + swap
+    # preemption.  Token identity vs single-device is ASSERTED — the
+    # sharded path is bit-preserving, so a mismatch is a bug, not noise.
+    import os as _os
+    import subprocess as _sp
+    repo = Path(__file__).resolve().parent.parent
+    scaling = {}
+    for devices, tp, dp in [(1, 1, 1), (2, 2, 1), (4, 2, 2), (8, 2, 4)]:
+        env = dict(_os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count"
+                             f"={devices}",
+                   JAX_PLATFORMS="cpu")
+        env["PYTHONPATH"] = str(repo / "src") + (
+            _os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        proc = _sp.run([sys.executable, "-m", "repro.runtime.sharded_check",
+                        "--devices", str(devices), "--tp", str(tp),
+                        "--dp", str(dp), "--scenarios", "plain"],
+                       capture_output=True, text=True, env=env, cwd=repo,
+                       timeout=560)
+        assert proc.returncode == 0, \
+            f"sharded_check dev={devices} failed:\n{proc.stderr[-2000:]}"
+        scaling[devices] = (tp, dp,
+                            json.loads(proc.stdout)["scenarios"]["plain"])
+    ref_tokens = scaling[1][2]["tokens"]
+    for devices in sorted(scaling):
+        tp, dp, sc = scaling[devices]
+        rep, match = sc["report"], sc["tokens"] == ref_tokens
+        assert match, f"device_count={devices} diverged from single-device"
+        json_rows.append(dict(
+            scenario=f"sharded_dev{devices}_tp{tp}_dp{dp}",
+            device_count=devices, tp=tp, dp=dp,
+            tok_s=round(rep["tok_s"], 2),
+            ttft_ms_p50=round(rep["ttft_wall_p50_ms"], 2),
+            ttft_ms_p95=round(rep["ttft_wall_p95_ms"], 2),
+            completed=rep["completed"],
+            preemptions=rep["preemptions"],
+            routed=rep["routed"],
+            imbalance=round(min(rep["imbalance"], 999.0), 3),
+            occupancy_per_replica=[round(o, 4)
+                                   for o in rep["occupancy_per_replica"]],
+            pool_bytes_per_token_per_device=(
+                rep["pool_bytes_per_token_per_device"]),
+            tokens_match_single_device=match))
+        emit(f"serving/sharded_dev{devices}_tp{tp}_dp{dp}", 0.0,
+             f"tok_s={rep['tok_s']:.1f};"
+             f"ttft_p50={rep['ttft_wall_p50_ms']:.0f};"
+             f"ttft_p95={rep['ttft_wall_p95_ms']:.0f};"
+             f"routed={rep['routed']};"
+             f"bytes_tok_dev={rep['pool_bytes_per_token_per_device']};"
+             f"tokens_match_single_device={match}")
 
     out = write_serving_json(json_rows)
     print(f"wrote {out} ({len(json_rows)} scenario rows, "

@@ -263,7 +263,8 @@ class PagedKVPool:
     """
 
     def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int,
-                 dtype=jnp.float32, tracer=None):
+                 dtype=jnp.float32, tracer=None, mesh=None,
+                 tp_axis: str = "model"):
         assert cfg.elitekv.enabled, "paged pool stores compressed streams only"
         self.trace = tracer or NULL_TRACER   # obs: alloc/free/truncate events
         for p_pos in range(cfg.block_period):
@@ -307,6 +308,31 @@ class PagedKVPool:
             return s
 
         self.pages = {f"p{p}": _streams() for p in range(cfg.block_period)}
+
+        # Tensor-parallel page placement: the k_e stream shards its kv-head
+        # dim over the mesh's TP axis; the head-shared latent and the
+        # per-token scales replicate (distributed/sharding.py
+        # ``serving_page_pspecs``).  Block ids, chains, refcounts, prefix
+        # hashes — everything host-side — stay shard-invariant: every device
+        # holds the same slot layout, just a head slice of k_e, so COW / swap
+        # / truncate / prefix sharing below never special-case the mesh.
+        self.mesh = mesh
+        self.tp_axis = tp_axis
+        self.tp = 1
+        if mesh is not None:
+            from repro.distributed import sharding as shardlib
+            plan = shardlib.plan_for_mesh(mesh)
+            if tp_axis in mesh.shape and mesh.shape[tp_axis] > 1:
+                assert cfg.n_kv_heads % mesh.shape[tp_axis] == 0, \
+                    (cfg.n_kv_heads, mesh.shape[tp_axis],
+                     "kv heads must divide tp (pad_cfg_for_tp)")
+                self.tp = mesh.shape[tp_axis]
+            specs = shardlib.serving_page_pspecs(cfg, plan)
+            self.pages = {
+                p_key: {name: jax.device_put(
+                            arr, jax.sharding.NamedSharding(mesh, specs[name]))
+                        for name, arr in layer.items()}
+                for p_key, layer in self.pages.items()}
 
     # -- allocation plumbing (prefix-cache aware) ---------------------------
     def _alloc(self, n: int) -> List[int]:
@@ -517,6 +543,20 @@ class PagedKVPool:
         n_slots = self.num_blocks * self.block_size
         return sum(a.nbytes // n_slots
                    for layer in self.pages.values() for a in layer.values())
+
+    def bytes_per_token_per_device(self) -> int:
+        """Pool bytes per token slot actually resident on EACH device: the
+        head-sharded ``k_e`` stream contributes ``1/tp`` of its global bytes,
+        replicated leaves contribute in full.  Equals ``bytes_per_token()``
+        when unsharded — the per-device-count benchmark scaling row reports
+        this number."""
+        n_slots = self.num_blocks * self.block_size
+        total = 0
+        for layer in self.pages.values():
+            for name, a in layer.items():
+                div = self.tp if name == "k_e" else 1
+                total += a.nbytes // div // n_slots
+        return total
 
     def stats(self) -> PoolStats:
         live = sum(self._lengths.values())

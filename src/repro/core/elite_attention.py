@@ -289,6 +289,25 @@ def _page_scales(pages):
     return pages["k_e_scale"], pages["c_k_scale"], pages["c_v_scale"]
 
 
+def _tp(mesh, tp_axis: str) -> int:
+    """Tensor-parallel width of ``mesh`` (1 when unsharded / axis absent)."""
+    if mesh is None or tp_axis not in mesh.shape:
+        return 1
+    return mesh.shape[tp_axis]
+
+
+def _pin(mesh, x, *spec):
+    """Constrain ``x`` to ``PartitionSpec(*spec)`` on ``mesh``.
+
+    Used to force gathered pool reads back to *replicated* before any
+    cross-head reduction: the ``k_e`` pages are head-sharded, and without the
+    pin GSPMD propagates that sharding into the ``wo`` contraction, summing
+    shard partials in a different float order than single-device — which
+    breaks the bit-identity serving wall."""
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(*spec)))
+
+
 def _gather_prefix(pages, params, cfg, block_tables, block_size: int, dt):
     """Materialize K/V for a sequence's cached *prefix* from pool pages.
 
@@ -353,7 +372,8 @@ def _attend_resumed(q, k_pre, v_pre, k_cur, v_cur, prefix_lens, q_group: int,
 
 def apply_prefill_paged(params, cfg, buffers, x, positions, pages,
                         slot_mapping, block_tables=None, prefix_lens=None,
-                        block_size: int = 0, constrain=lambda n, t: t):
+                        block_size: int = 0, constrain=lambda n, t: t,
+                        mesh=None, tp_axis: str = "model"):
     """Prefill a (chunk of a) sequence and scatter its streams into pool pages.
 
     Fresh sequences (``block_tables is None``): no prior context, so attention
@@ -400,6 +420,13 @@ def apply_prefill_paged(params, cfg, buffers, x, positions, pages,
     else:
         k_pre, v_pre = _gather_prefix(pages, params, cfg, block_tables,
                                       block_size, x.dtype)
+        if _tp(mesh, tp_axis) > 1:
+            # Prefill compute is deliberately *replicated* under TP (only the
+            # pool page storage is sharded; the slot scatter needs no
+            # communication).  The prefix gather is the one place the
+            # head-sharded pages leak into activations — pin it back (_pin).
+            k_pre = _pin(mesh, k_pre)
+            v_pre = _pin(mesh, v_pre)
         o = _attend_resumed(q, k_pre, v_pre, k, v, prefix_lens, cfg.q_group,
                             cfg.head_dim ** -0.5, constrain=constrain)
     return jnp.einsum("bshe,hed->bsd", o, params["wo"].astype(x.dtype)), new_pages
@@ -407,7 +434,8 @@ def apply_prefill_paged(params, cfg, buffers, x, positions, pages,
 
 def apply_verify_paged(params, cfg, buffers, x, pages, slot_mapping,
                        block_tables, q_offsets, lengths, block_size: int,
-                       use_kernel: bool = True, constrain=lambda n, t: t):
+                       use_kernel: bool = True, constrain=lambda n, t: t,
+                       mesh=None, tp_axis: str = "model"):
     """Absorbed multi-query *verify* attention for speculative decode.
 
     A verify window is a resumed chunk of ``W = k+1`` tokens — the pending
@@ -450,7 +478,12 @@ def apply_verify_paged(params, cfg, buffers, x, pages, slot_mapping,
     from repro.kernels import ops as kops
     K_e, (C_k, C_v) = new_pages["k_e"], _page_latents(new_pages)
     scales = _page_scales(new_pages)
-    if scales is None:
+    if _tp(mesh, tp_axis) > 1:
+        o = kops.elite_verify_paged_tp(
+            q_e, q_lat, K_e, C_k, C_v, scales, block_tables, q_offsets,
+            lengths, q_group=G, scale=dh ** -0.5, block_size=block_size,
+            mesh=mesh, tp_axis=tp_axis, force_xla=not use_kernel)
+    elif scales is None:
         o = kops.elite_verify_paged(
             q_e, q_lat, K_e, C_k, C_v, block_tables, q_offsets, lengths,
             q_group=G, scale=dh ** -0.5, block_size=block_size,
@@ -470,7 +503,8 @@ def apply_verify_paged(params, cfg, buffers, x, pages, slot_mapping,
 
 def apply_decode_paged(params, cfg, buffers, x, pages, slot_mapping,
                        block_tables, lengths, block_size: int,
-                       use_kernel: bool = True, constrain=lambda n, t: t):
+                       use_kernel: bool = True, constrain=lambda n, t: t,
+                       mesh=None, tp_axis: str = "model"):
     """Absorbed decode over the block pool — one token per serving slot.
 
     x [B,1,d]; lengths [B] live length *including* the new token (0 for
@@ -498,7 +532,13 @@ def apply_decode_paged(params, cfg, buffers, x, pages, slot_mapping,
     from repro.kernels import ops as kops
     K_e, (C_k, C_v) = new_pages["k_e"], _page_latents(new_pages)
     scales = _page_scales(new_pages)
-    if scales is None:
+    if _tp(mesh, tp_axis) > 1:
+        o = kops.elite_decode_paged_tp(
+            q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k, C_v,
+            scales, block_tables, lengths, q_group=G, scale=dh ** -0.5,
+            block_size=block_size, mesh=mesh, tp_axis=tp_axis,
+            force_xla=not use_kernel)
+    elif scales is None:
         o = kops.elite_decode_paged(
             q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k, C_v,
             block_tables, lengths, q_group=G, scale=dh ** -0.5,

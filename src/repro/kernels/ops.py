@@ -275,3 +275,136 @@ def rope_elite(x, positions, freqs, block_s: int = 1024):
     with sp:
         return jax.block_until_ready(_rope_elite_jit(x, positions, freqs,
                                                      block_s))
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel shard_map wrappers (multi-device serving)
+# ---------------------------------------------------------------------------
+#
+# The paged kernels treat heads as *batch* dims of their grid — no reduction
+# ever crosses a head.  That makes head-sharding exact: each shard runs the
+# ordinary dispatch on its head slice (and its kv-head slice of the k_e
+# pages; the head-shared latent pages, per-token scales, block table and
+# lengths are replicated), producing per-head outputs bitwise identical to
+# the single-device call.  A tiled ``all_gather`` over the head axis then
+# replicates the full pre-epilogue output ``o [..., nh, d_c]`` so the
+# absorbed ``bv``/``wo`` epilogue — the only cross-head reduction in the
+# decode path — runs replicated with single-device summation order.  (A
+# ``psum_scatter`` epilogue fused into a head-sharded ``wo`` would halve the
+# collective bytes but sums shard partials in a different float order;
+# bit-identity to single-device is the serving wall, so the gather wins.
+# docs/architecture.md#sharded-decode diagrams the data flow.)
+
+from jax.sharding import PartitionSpec as _P
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """Version-compat ``shard_map``: ``jax.shard_map`` where it exists, the
+    ``jax.experimental`` spelling otherwise, with replication checking
+    disabled under whichever keyword this jax spells it — the epilogue
+    all_gather makes outputs replicated by construction, which the static
+    checker cannot see through the inner jit call."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+        except TypeError:
+            continue
+    raise RuntimeError("no compatible shard_map signature found")
+
+
+def _rep(x) -> _P:
+    return _P(*([None] * x.ndim))
+
+
+def elite_decode_paged_tp(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, scales,
+                          block_tables, lengths, q_group: int, scale: float,
+                          block_size: int, mesh, tp_axis: str = "model",
+                          force_xla: bool = False):
+    """Tensor-parallel paged decode: ``q_e``/``q_lat [B, nh, *]`` sharded on
+    heads, ``k_e_pages [n_slots, nkv, 2r]`` sharded on kv heads, everything
+    else replicated; returns the replicated full-head ``o [B, nh, d_c]``.
+
+    ``scales`` is ``None`` for an f32 pool or the
+    ``(k_e_scale, c_k_scale, c_v_scale)`` triple for int8 — quantization is
+    exact under head sharding because scales are per-token and dequant is
+    elementwise."""
+    if mesh.shape[tp_axis] == 1:
+        if scales is None:
+            return elite_decode_paged(q_e, q_lat, k_e_pages, c_k_pages,
+                                      c_v_pages, block_tables, lengths,
+                                      q_group, scale, block_size, force_xla)
+        return elite_decode_paged_q8(q_e, q_lat, k_e_pages, c_k_pages,
+                                     c_v_pages, *scales, block_tables,
+                                     lengths, q_group, scale, block_size,
+                                     force_xla)
+
+    heads = _P(None, tp_axis, None)
+    args = [q_e, q_lat, k_e_pages, c_k_pages, c_v_pages]
+    specs = [heads, heads, _P(None, tp_axis, None),
+             _rep(c_k_pages), _rep(c_v_pages)]
+    if scales is not None:
+        args += list(scales)
+        specs += [_rep(s) for s in scales]
+    args += [block_tables, lengths]
+    specs += [_rep(block_tables), _rep(lengths)]
+
+    def body(*xs):
+        if scales is None:
+            bq_e, bq_lat, k_e, c_k, c_v, bt, ln = xs
+            o = elite_decode_paged(bq_e, bq_lat, k_e, c_k, c_v, bt, ln,
+                                   q_group, scale, block_size, force_xla)
+        else:
+            bq_e, bq_lat, k_e, c_k, c_v, ks, cks, cvs, bt, ln = xs
+            o = elite_decode_paged_q8(bq_e, bq_lat, k_e, c_k, c_v, ks, cks,
+                                      cvs, bt, ln, q_group, scale, block_size,
+                                      force_xla)
+        return jax.lax.all_gather(o, tp_axis, axis=1, tiled=True)
+
+    return _shard_map(body, mesh, tuple(specs), _P(None, None, None))(*args)
+
+
+def elite_verify_paged_tp(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, scales,
+                          block_tables, q_offsets, lengths, q_group: int,
+                          scale: float, block_size: int, mesh,
+                          tp_axis: str = "model", force_xla: bool = False):
+    """Tensor-parallel speculative verify: like :func:`elite_decode_paged_tp`
+    but queries carry a window dim — ``q_e``/``q_lat [B, W, nh, *]`` shard on
+    head axis 2 and the gather reassembles ``o [B, W, nh, d_c]``."""
+    if mesh.shape[tp_axis] == 1:
+        if scales is None:
+            return elite_verify_paged(q_e, q_lat, k_e_pages, c_k_pages,
+                                      c_v_pages, block_tables, q_offsets,
+                                      lengths, q_group, scale, block_size,
+                                      force_xla)
+        return elite_verify_paged_q8(q_e, q_lat, k_e_pages, c_k_pages,
+                                     c_v_pages, *scales, block_tables,
+                                     q_offsets, lengths, q_group, scale,
+                                     block_size, force_xla)
+
+    heads = _P(None, None, tp_axis, None)
+    args = [q_e, q_lat, k_e_pages, c_k_pages, c_v_pages]
+    specs = [heads, heads, _P(None, tp_axis, None),
+             _rep(c_k_pages), _rep(c_v_pages)]
+    if scales is not None:
+        args += list(scales)
+        specs += [_rep(s) for s in scales]
+    args += [block_tables, q_offsets, lengths]
+    specs += [_rep(block_tables), _rep(q_offsets), _rep(lengths)]
+
+    def body(*xs):
+        if scales is None:
+            bq_e, bq_lat, k_e, c_k, c_v, bt, qo, ln = xs
+            o = elite_verify_paged(bq_e, bq_lat, k_e, c_k, c_v, bt, qo, ln,
+                                   q_group, scale, block_size, force_xla)
+        else:
+            bq_e, bq_lat, k_e, c_k, c_v, ks, cks, cvs, bt, qo, ln = xs
+            o = elite_verify_paged_q8(bq_e, bq_lat, k_e, c_k, c_v, ks, cks,
+                                      cvs, bt, qo, ln, q_group, scale,
+                                      block_size, force_xla)
+        return jax.lax.all_gather(o, tp_axis, axis=2, tiled=True)
+
+    return _shard_map(body, mesh, tuple(specs), _P(None, None, None, None))(*args)

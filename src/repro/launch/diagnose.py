@@ -15,7 +15,10 @@ written by ``launch/serve.py --trace``:
 prints the phase-time table, kernel-span totals, the per-request lifecycle
 table (TTFT / residency / retirement reason), the most-preempted requests,
 and an ASCII pool-occupancy timeline — the terminal view of what Perfetto
-renders graphically.
+renders graphically.  Traces from a data-parallel run (``--dp N``) add a
+per-replica occupancy sparkline block (from the router's ``r{i}_``-prefixed
+pool counters) and a replica-imbalance line (max/min requests admitted,
+from the ``route`` instants).
 """
 import argparse
 import json
@@ -65,6 +68,8 @@ def trace_summary(argv):
     reqs = defaultdict(dict)                  # uid -> lifecycle timestamps
     preempts = Counter()
     occupancy, slots = [], []
+    replica_occ = defaultdict(list)           # replica id -> (ts, blocks)
+    routed = Counter()                        # replica id -> admissions
     for e in events:
         ph, name, uid = e.get("ph"), e.get("name", ""), \
             (e.get("args") or {}).get("uid")
@@ -84,6 +89,13 @@ def trace_summary(argv):
             occupancy.append((e["ts"], float(e["args"]["value"])))
         elif ph == "C" and name == "slots_occupied":
             slots.append((e["ts"], float(e["args"]["value"])))
+        elif ph == "C":
+            m = re.match(r"r(\d+)_pool_blocks_used$", name)
+            if m:
+                replica_occ[int(m.group(1))].append(
+                    (e["ts"], float(e["args"]["value"])))
+        if ph == "i" and name == "route":
+            routed[(e.get("args") or {}).get("replica", "?")] += 1
 
     for cat, title in (("phase", "phase time"), ("kernel", "kernel spans"),
                        ("swap", "swap traffic")):
@@ -125,6 +137,20 @@ def trace_summary(argv):
             t_ms = (samples[-1][0] - samples[0][0]) / 1e3
             print(f"== {title} (peak {peak:.0f} {unit} over {t_ms:.0f}ms) ==")
             print(f"  [{line}]")
+
+    if replica_occ:                           # data-parallel run (router)
+        print(f"== per-replica pool occupancy ({len(replica_occ)} "
+              f"replicas) ==")
+        for i in sorted(replica_occ):
+            line, peak = _sparkline(replica_occ[i], args.width)
+            print(f"  r{i} [{line}] peak {peak:.0f} blocks, "
+                  f"{routed.get(i, 0)} routed")
+    if routed:
+        counts = [routed.get(i, 0) for i in sorted(routed)]
+        lo, hi = min(counts), max(counts)
+        ratio = "inf" if lo == 0 else f"{hi / lo:.2f}"
+        print(f"== replica imbalance ==\n  routed={counts} max/min={ratio} "
+              f"(1.00 = perfectly even)")
 
 
 def main(argv=None):

@@ -103,8 +103,16 @@ def serve_stream(params, buffers, cfg, args):
         speculate_k=args.speculate, draft_rank=args.draft_rank,
         prefix_cache=args.prefix_cache,
         cache_dtype="int8" if args.pool_dtype == "int8" else jnp.float32)
+    # multi-device serving: a (dp, tp) mesh sliced into per-replica submeshes
+    # (launch/mesh.py) — tp head-shards attention inside each replica, dp adds
+    # independent scheduler replicas behind the router (runtime/router.py)
+    meshes = None
+    if args.tp > 1 or args.dp > 1:
+        from repro.launch.mesh import make_serving_mesh, replica_meshes
+        meshes = replica_meshes(make_serving_mesh(tp=args.tp, dp=args.dp))
     sched = serve_loop.Scheduler(params, buffers, cfg, scfg, tracer=tracer,
-                                 metrics=REGISTRY)
+                                 metrics=REGISTRY,
+                                 mesh=meshes[0] if meshes else None)
     p_lo = min(4, args.prompt_len)          # sampling floors, valid even for
     n_lo = min(4, args.new_tokens)          # --prompt-len/--new-tokens < 4
     shared = (rng.integers(0, cfg.vocab_size, args.shared_prefix)
@@ -124,9 +132,37 @@ def serve_stream(params, buffers, cfg, args):
             arrival=t,
             temperature=args.temperature, top_p=args.top_p,
             seed=args.sample_seed + i))
+    if args.dp > 1:
+        from repro.runtime.router import Router
+        router = Router(params, buffers, cfg, scfg, num_replicas=args.dp,
+                        meshes=meshes, tracer=tracer, metrics=REGISTRY)
+        rep = router.run(reqs)
+        pool0 = router.replicas[0].pool
+        print(f"arch={cfg.name} stream [tp={args.tp} dp={args.dp} "
+              f"devices={args.tp * args.dp}]: {rep.summary()}")
+        print(rep.per_replica_table())
+        print(f"pool/device: {pool0.bytes_per_token_per_device()}B/token "
+              f"(global {pool0.bytes_per_token()}B/token, tp={pool0.tp}); "
+              f"{args.dp} replicas x {scfg.num_blocks} blocks x "
+              f"{scfg.block_size} tokens")
+        if tracer is not None:
+            path = write_chrome_trace(args.trace, tracer)
+            print(f"trace: {tracer.emitted} events ({tracer.dropped} dropped "
+                  f"by the ring) -> {path} (open in https://ui.perfetto.dev)")
+        if args.metrics_out:
+            with open(args.metrics_out, "w", encoding="utf-8") as f:
+                f.write(REGISTRY.to_prometheus())
+            print(f"metrics: {len(REGISTRY.names())} instruments -> "
+                  f"{args.metrics_out} (Prometheus text format)")
+        return rep
     report = sched.run(reqs)
     stats = sched.pool.stats()
-    print(f"arch={cfg.name} stream: {report.summary()}")
+    tptag = f" [tp={args.tp}]" if args.tp > 1 else ""
+    print(f"arch={cfg.name} stream{tptag}: {report.summary()}")
+    if args.tp > 1:
+        print(f"pool/device: {sched.pool.bytes_per_token_per_device()}B/token "
+              f"(global {sched.pool.bytes_per_token()}B/token, "
+              f"tp={sched.pool.tp})")
     if scfg.prefill_chunk_tokens:
         print(f"chunked prefill: {report.prefill_chunks} forwards of "
               f"<= {scfg.prefill_chunk_tokens} tokens x {scfg.chunk_lanes} "
@@ -237,6 +273,16 @@ def main(argv=None):
                     help="nucleus sampling mass (1 = full softmax)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base PRNG seed; request i samples with seed+i")
+    # multi-device serving (docs/serving.md#sharded-serving)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel width: shard absorbed attention "
+                         "heads and the k_e pool pages over a 'model' mesh "
+                         "axis (token streams stay bit-identical)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replicas: N independent schedulers "
+                         "behind a least-loaded router (needs tp*dp devices; "
+                         "on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     # observability (docs/observability.md)
     ap.add_argument("--trace", default="",
                     help="write a Chrome trace-event timeline of the stream "
@@ -255,6 +301,14 @@ def main(argv=None):
     cfg = base
     if args.elitekv and cfg.n_attn_layers:
         cfg = dataclasses.replace(cfg, elitekv=pick_dims(cfg, args.cache_ratio, align=16))
+
+    if args.tp < 1 or args.dp < 1:
+        ap.error("--tp and --dp must be >= 1")
+    if (args.tp > 1 or args.dp > 1) and not args.stream:
+        ap.error("--tp/--dp shard the paged serving path; add --stream")
+    if args.tp > 1 and cfg.elitekv.enabled and cfg.n_kv_heads % args.tp:
+        ap.error(f"--tp {args.tp} must divide n_kv_heads={cfg.n_kv_heads} "
+                 "(see pad_cfg_for_tp in distributed/sharding.py)")
 
     key = jax.random.PRNGKey(args.seed)
     params, buffers = lm.init(key, cfg)

@@ -138,7 +138,7 @@ def _run_layer(p, b, cfg, p_pos: int, h, positions, mode, cache, index,
                     block_tables=paged.get("block_tables"),
                     prefix_lens=paged.get("prefix_lens"),
                     block_size=paged.get("block_size", 0),
-                    constrain=constrain)
+                    constrain=constrain, mesh=paged.get("mesh"))
             elif mode == "prefill":
                 a, new_cache = elite_attention.apply_prefill(
                     p["attn"], cfg, b, hn, positions, cache, constrain=constrain)
@@ -148,13 +148,13 @@ def _run_layer(p, b, cfg, p_pos: int, h, positions, mode, cache, index,
                     paged["block_tables"], paged["q_offsets"],
                     paged["lengths"], paged["block_size"],
                     use_kernel=paged.get("use_kernel", True),
-                    constrain=constrain)
+                    constrain=constrain, mesh=paged.get("mesh"))
             elif paged is not None:
                 a, new_cache = elite_attention.apply_decode_paged(
                     p["attn"], cfg, b, hn, cache, paged["slot_mapping"],
                     paged["block_tables"], paged["lengths"],
                     paged["block_size"], use_kernel=paged.get("use_kernel", True),
-                    constrain=constrain)
+                    constrain=constrain, mesh=paged.get("mesh"))
             else:
                 a, new_cache = elite_attention.apply_decode(
                     p["attn"], cfg, b, hn, index, cache, constrain=constrain)
@@ -347,7 +347,7 @@ def apply_prefill_paged(params, buffers, cfg, batch, pages, slot_mapping,
     h = constrain("embed", h)
     S = h.shape[1]
     positions = jnp.arange(S)
-    paged = {"slot_mapping": slot_mapping}
+    paged = {"slot_mapping": slot_mapping, "mesh": mesh}
     if chunk_start is not None:
         cs = jnp.asarray(chunk_start, jnp.int32)
         # scalar → [S] positions (PR-3 single-lane path); [B] → [B,S] per-lane
@@ -379,7 +379,7 @@ def apply_decode_paged(params, buffers, cfg, batch, pages, slot_mapping,
     h = _embed_step(params, cfg, batch)
     paged = {"slot_mapping": slot_mapping, "block_tables": block_tables,
              "lengths": lengths, "block_size": block_size,
-             "use_kernel": use_kernel}
+             "use_kernel": use_kernel, "mesh": mesh}
     h, aux, new_pages = _scan_blocks(
         params, buffers, cfg, h, None, mode="decode",
         cache={"blocks": pages}, moe_impl=moe_impl, mesh=mesh,
@@ -410,7 +410,7 @@ def apply_verify_paged(params, buffers, cfg, batch, pages, slot_mapping,
     paged = {"slot_mapping": slot_mapping, "block_tables": block_tables,
              "q_offsets": q_offsets, "lengths": lengths,
              "block_size": block_size, "use_kernel": use_kernel,
-             "verify": True}               # explicit dispatch tag, not
+             "mesh": mesh, "verify": True}  # explicit dispatch tag, not
     h, aux, new_pages = _scan_blocks(      # key-presence sniffing
         params, buffers, cfg, h, None, mode="decode",
         cache={"blocks": pages}, moe_impl=moe_impl, mesh=mesh,

@@ -515,8 +515,13 @@ class Scheduler:
         self.params, self.buffers, self.cfg, self.scfg = params, buffers, cfg, scfg
         self.trace = tracer or NULL_TRACER
         self.metrics = metrics or MetricsRegistry()
+        # mesh=None serves single-device; a mesh with a >1 "model" axis
+        # head-shards the k_e pages and runs decode/verify attention under
+        # shard_map (kernels/ops.py TP wrappers) — token streams stay
+        # bit-identical either way (tests/test_sharded_serving.py).
         self.pool = PagedKVPool(cfg, scfg.num_blocks, scfg.block_size,
-                                dtype=scfg.cache_dtype, tracer=self.trace)
+                                dtype=scfg.cache_dtype, tracer=self.trace,
+                                mesh=mesh)
         self.bm = BlockManager(self.pool, policy=scfg.admission,
                                prefix_cache=scfg.prefix_cache)
         self.slots: List[Optional[Request]] = [None] * scfg.max_slots

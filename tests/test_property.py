@@ -406,6 +406,104 @@ def test_block_manager_prefix_cache_conservation(ops, num_blocks):
     assert pool.allocator.num_free + pc.num_retained == num_blocks
 
 
+_ROUTER_OPS = st.lists(
+    st.tuples(st.sampled_from(["route", "admit", "retire", "preempt"]),
+              st.integers(0, 3),            # replica index (mod n)
+              st.integers(1, 12)),          # token count for admissions
+    min_size=1, max_size=60)
+
+
+@given(ops=_ROUTER_OPS, n=st.integers(2, 4), num_blocks=st.integers(2, 6))
+@settings(max_examples=15, deadline=None)
+def test_router_admission_ledger_conservation(ops, n, num_blocks):
+    """Router admission op-fuzz (runtime/router.py::ReplicaBoard): arbitrary
+    route/admit/preempt/retire interleavings — with every admission backed by
+    real block growth on that replica's own pool — keep the ledger exactly
+    conserved after EVERY op:
+
+    * sum(waiting) + sum(resident) == submitted - retired (board.check)
+    * the board mirrors the model queues replica by replica
+    * ``pick`` always returns a least-loaded replica (deterministic ties)
+    * no replica's pool leaks: free + owned == capacity even when an
+      admission bounces off ``OutOfBlocks`` and re-queues
+
+    This is the same ledger the live Router reconciles against observed
+    scheduler deltas each global step, so conservation here is conservation
+    in production."""
+    import collections as _c
+    import dataclasses as dc
+    from repro.configs import get_config
+    from repro.configs.base import EliteKVConfig
+    from repro.core.cache import BlockManager, OutOfBlocks, PagedKVPool
+    from repro.runtime.router import ReplicaBoard
+    cfg = dc.replace(
+        get_config("tinyllama_1_1b").reduced(num_layers=2, vocab_size=64),
+        elitekv=EliteKVConfig(enabled=True, elite_r=2, d_ckv=8))
+    board = ReplicaBoard(n)
+    pools = [PagedKVPool(cfg, num_blocks=num_blocks, block_size=4)
+             for _ in range(n)]
+    bms = [BlockManager(p) for p in pools]
+    waiting = [_c.deque() for _ in range(n)]
+    resident = [dict() for _ in range(n)]    # uid -> tokens held
+    uid = 0
+
+    def check():
+        board.check()
+        for j in range(n):
+            assert board.waiting[j] == len(waiting[j])
+            assert board.resident[j] == len(resident[j])
+            alloc = pools[j].allocator
+            assert alloc.num_free + alloc.num_used == num_blocks
+            owned = [b for sid in list(pools[j]._tables)
+                     for b in pools[j].block_table(sid)]
+            assert len(owned) == len(set(owned)) == alloc.num_used
+
+    for op, ridx, tokens in ops:
+        i = ridx % n
+        if op == "route":
+            j = board.pick()
+            assert board.load(j) == min(board.load(k) for k in range(n))
+            board.route(j)
+            waiting[j].append(uid)
+            uid += 1
+        elif op == "admit" and waiting[i]:
+            u = waiting[i].popleft()
+            try:
+                bms[i].grow(u, tokens)
+                board.admit(i)
+                resident[i][u] = tokens
+            except OutOfBlocks:
+                bms[i].release(u)            # partial growth must roll back
+                waiting[i].appendleft(u)     # still waiting, ledger untouched
+        elif op == "retire" and resident[i]:
+            u = next(iter(resident[i]))
+            del resident[i][u]
+            bms[i].release(u)
+            board.retire(i)
+        elif op == "preempt" and resident[i]:
+            u = next(iter(resident[i]))
+            del resident[i][u]
+            bms[i].release(u)                # recompute-style full eviction
+            board.preempt(i)
+            waiting[i].append(u)
+        check()
+
+    # drain: admit-then-retire everything left; the ledger must land on zero
+    for i in range(n):
+        while waiting[i]:
+            u = waiting[i].popleft()
+            board.admit(i)
+            board.retire(i)
+        for u in list(resident[i]):
+            del resident[i][u]
+            bms[i].release(u)
+            board.retire(i)
+    check()
+    assert sum(board.waiting) + sum(board.resident) == 0
+    assert board.submitted == board.retired == uid
+    assert all(p.allocator.num_free == num_blocks for p in pools)
+
+
 @given(B=st.integers(1, 3), length=st.integers(1, 32), seed=st.integers(0, 50))
 @settings(max_examples=10, deadline=None)
 def test_elite_decode_kernel_vs_oracle_property(B, length, seed):

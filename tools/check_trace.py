@@ -38,6 +38,12 @@ Metrics checks (Prometheus text exposition format):
   self-consistent: ``serve_pool_quantized`` must be exactly 0 or 1,
   ``serve_pool_bytes_per_token`` must be positive, and no member may
   be negative
+* the name-encoded ``serve_replica_{i}_*`` family (the router's
+  per-replica instruments — the registry has no labels by design) is
+  all-or-nothing across BOTH dimensions: replica ids must be contiguous
+  from 0, every id must export every suffix, no member may be negative,
+  and the per-replica ``submitted_total`` / ``completed_total`` must sum
+  to the fleet-wide ``serve_requests_{submitted,completed}_total``
 
 Exit status 0 and a one-line summary on success; every violation is
 printed and the exit status is 1.  CI's ``obs`` job runs this against a
@@ -76,6 +82,11 @@ _POOL_FAMILY = ("serve_pool_blocks_used",
                 "serve_pool_quantized",
                 "serve_pool_bytes_per_token",
                 "serve_pool_allocated_bytes")
+#: per-replica suffixes the router exports for EVERY replica id
+#: (mirrors runtime/router.py::REPLICA_METRIC_SUFFIXES)
+_REPLICA_SUFFIXES = ("submitted_total", "completed_total", "waiting",
+                     "resident", "blocks_used")
+_REPLICA_RE = re.compile(r"^serve_replica_(\d+)_([a-z_]+)$")
 _SAMPLE_RE = re.compile(
     r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
     r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)(?:\s+\d+)?$")
@@ -324,6 +335,40 @@ def check_metrics(path: Path) -> int:
         if bpt is not None and bpt <= 0:
             err(f"{path}: serve_pool_bytes_per_token must be positive, "
                 f"got {bpt}")
+
+    # serve_replica_{i}_* family: all-or-nothing over ids × suffixes
+    replica = {}                             # (id, suffix) -> value
+    for n, _, v in samples:
+        if not n.startswith("serve_replica_"):
+            continue
+        m = _REPLICA_RE.match(n)
+        if not m or m.group(2) not in _REPLICA_SUFFIXES:
+            err(f"{path}: unknown serve_replica_* instrument {n!r}")
+            continue
+        replica[(int(m.group(1)), m.group(2))] = v
+    if replica:
+        ids = sorted({i for i, _ in replica})
+        if ids != list(range(len(ids))):
+            err(f"{path}: serve_replica_* ids not contiguous from 0: {ids}")
+        for i in ids:
+            for suffix in _REPLICA_SUFFIXES:
+                if (i, suffix) not in replica:
+                    err(f"{path}: serve_replica_* family incomplete — "
+                        f"replica {i} missing {suffix}")
+        for (i, suffix), v in sorted(replica.items()):
+            if v < 0:
+                err(f"{path}: serve_replica_{i}_{suffix} is negative ({v})")
+        globals_ = {n: v for n, _, v in samples
+                    if n in ("serve_requests_submitted_total",
+                             "serve_requests_completed_total")}
+        for suffix, gname in (("submitted_total",
+                               "serve_requests_submitted_total"),
+                              ("completed_total",
+                               "serve_requests_completed_total")):
+            total = sum(v for (i, s), v in replica.items() if s == suffix)
+            if gname in globals_ and total != globals_[gname]:
+                err(f"{path}: sum of serve_replica_*_{suffix} ({total}) != "
+                    f"{gname} ({globals_[gname]})")
     return len(samples)
 
 
