@@ -82,6 +82,22 @@ class OutOfBlocks(RuntimeError):
     after retiring sequences, or refuse admission)."""
 
 
+#: Per-BLOCK summary leaf suffixes (sparse decode, docs/serving.md).  A pool
+#: built with ``block_summaries=True`` stores, beside the latent key stream,
+#: a masked mean and absmax of each block's valid rows:
+#:   "<stream>_blkmean" / "<stream>_blkmax"  —  [n_super, num_blocks, d_c] f32
+#: Unlike the int8 scale leaves these index the BLOCK axis, not the slot
+#: axis, so the slot-generic lifecycle edges (COW copy, host swap) special-
+#: case them by name — everything else (truncate, prefix sharing, release)
+#: needs nothing: summaries are a pure function of block content.
+BLOCK_SUMMARY_SUFFIXES = ("_blkmean", "_blkmax")
+
+
+def is_block_summary(name: str) -> bool:
+    """True for page-leaf names that index blocks rather than slots."""
+    return name.endswith(BLOCK_SUMMARY_SUFFIXES)
+
+
 # ---------------------------------------------------------------------------
 # prefix caching: chained block hashes + the content-addressed block cache
 # ---------------------------------------------------------------------------
@@ -264,7 +280,7 @@ class PagedKVPool:
 
     def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int,
                  dtype=jnp.float32, tracer=None, mesh=None,
-                 tp_axis: str = "model"):
+                 tp_axis: str = "model", block_summaries: bool = False):
         assert cfg.elitekv.enabled, "paged pool stores compressed streams only"
         self.trace = tracer or NULL_TRACER   # obs: alloc/free/truncate events
         for p_pos in range(cfg.block_period):
@@ -281,6 +297,12 @@ class PagedKVPool:
         # cases — they are just more page leaves.
         self.dtype = jnp.dtype(dtype)
         self.quantized = quant.is_int8(self.dtype)
+        # block_summaries=True (sparse top-k decode) adds two f32 leaves per
+        # latent KEY stream summarizing each block's valid rows — see
+        # BLOCK_SUMMARY_SUFFIXES above.  Maintained by the jitted scatter
+        # (core/elite_attention.py), copied block-row-wise on COW, carried
+        # byte-exactly through host swap, rewritten by recompute prefill.
+        self.block_summaries = bool(block_summaries)
         self.allocator = BlockAllocator(num_blocks)
         self._tables: Dict[int, List[int]] = {}   # seq_id → block chain
         self._lengths: Dict[int, int] = {}        # seq_id → live token count
@@ -305,6 +327,11 @@ class PagedKVPool:
                 if self.quantized:
                     s[name + "_scale"] = jnp.zeros((n_super, n_slots),
                                                    jnp.float32)
+            if self.block_summaries:
+                key = "c" if e.lrd == "joint" else "c_k"
+                for sfx in BLOCK_SUMMARY_SUFFIXES:
+                    s[key + sfx] = jnp.zeros(
+                        (n_super, num_blocks) + tails[key], jnp.float32)
             return s
 
         self.pages = {f"p{p}": _streams() for p in range(cfg.block_period)}
@@ -422,8 +449,12 @@ class PagedKVPool:
                 src = np.arange(b * bs, (b + 1) * bs)
                 dst = np.arange(new * bs, (new + 1) * bs)
                 for p_key, layer in self.pages.items():
+                    # block-summary leaves index blocks, not slots: copy the
+                    # single summary row; every other leaf copies slot-wise
                     self.pages[p_key] = {
-                        name: arr.at[:, dst].set(arr[:, src])
+                        name: (arr.at[:, new].set(arr[:, b])
+                               if is_block_summary(name)
+                               else arr.at[:, dst].set(arr[:, src]))
                         for name, arr in layer.items()}
                 self._refcount[b] -= 1
                 table[bi] = new
@@ -583,12 +614,20 @@ class SwappedSeq:
     """Host-side copy of a preempted sequence's cached streams (swap
     eviction).  ``streams[p_key][name]`` is a ``[n_super, length, ...]``
     numpy array in *token order* — independent of which physical blocks the
-    sequence owned, so swap-in may land on a completely different chain."""
+    sequence owned, so swap-in may land on a completely different chain.
+    ``block_streams`` carries the chain's per-block summary rows (sparse
+    pools only) in *chain order* — ``[n_super, n_chain_blocks, ...]`` —
+    restored byte-exactly onto whatever blocks swap-in allocates, so block
+    selection is invariant under swap."""
     length: int
     streams: Dict[str, Dict[str, np.ndarray]]
+    block_streams: Dict[str, Dict[str, np.ndarray]] = \
+        dataclasses.field(default_factory=dict)
 
     def nbytes(self) -> int:
-        return sum(a.nbytes for s in self.streams.values() for a in s.values())
+        return sum(a.nbytes for s in self.streams.values() for a in s.values()) \
+            + sum(a.nbytes for s in self.block_streams.values()
+                  for a in s.values())
 
 
 class BlockManager:
@@ -757,13 +796,24 @@ class BlockManager:
         with self.pool.trace.span("swap_out", track="pool", cat="swap",
                                   seq=seq_id, length=length):
             # gather the victim's slots on device, then transfer just those —
-            # host traffic is O(sequence), not O(pool)
+            # host traffic is O(sequence), not O(pool).  Block-summary leaves
+            # index blocks, not slots: their chain rows travel separately.
             slots = jnp.asarray(self.pool.flat_slots(seq_id, np.arange(length)))
+            chain = jnp.asarray(
+                self.pool.block_table(seq_id)[:-(-length // self.pool.block_size)],
+                jnp.int32)
             streams = {p_key: {name: np.asarray(arr[:, slots])
-                               for name, arr in layer.items()}
+                               for name, arr in layer.items()
+                               if not is_block_summary(name)}
                        for p_key, layer in self.pool.pages.items()}
+            block_streams = {
+                p_key: {name: np.asarray(arr[:, chain])
+                        for name, arr in layer.items()
+                        if is_block_summary(name)}
+                for p_key, layer in self.pool.pages.items()}
             self.release(seq_id)
-            swapped = SwappedSeq(length=length, streams=streams)
+            swapped = SwappedSeq(length=length, streams=streams,
+                                 block_streams=block_streams)
         self.swap_outs += 1
         self.swapped_bytes += swapped.nbytes()
         return swapped
@@ -778,9 +828,21 @@ class BlockManager:
                                                      np.arange(swapped.length)))
             for p_key, layer in swapped.streams.items():
                 self.pool.pages[p_key] = {
-                    name: self.pool.pages[p_key][name].at[:, slots].set(
+                    **self.pool.pages[p_key],
+                    **{name: self.pool.pages[p_key][name].at[:, slots].set(
                         jnp.asarray(host, self.pool.pages[p_key][name].dtype))
-                    for name, host in layer.items()}
+                       for name, host in layer.items()}}
+            if swapped.block_streams:
+                chain = jnp.asarray(
+                    self.pool.block_table(seq_id)[
+                        :-(-swapped.length // self.pool.block_size)],
+                    jnp.int32)
+                for p_key, layer in swapped.block_streams.items():
+                    self.pool.pages[p_key] = {
+                        **self.pool.pages[p_key],
+                        **{name: self.pool.pages[p_key][name]
+                            .at[:, chain].set(jnp.asarray(host))
+                           for name, host in layer.items()}}
         self.swap_ins += 1
 
 

@@ -270,7 +270,49 @@ def _scatter_pages(pages, k_e_new, c_k_new, c_v_new, slot_mapping):
     else:
         put("c_k", c_k_new)
         put("c_v", c_v_new)
+    lat_key = "c" if "c" in pages else "c_k"
+    if lat_key + "_blkmean" in pages:
+        _update_block_summaries(new, lat_key, slot_mapping)
     return new
+
+
+def _update_block_summaries(pages, key, slot_mapping):
+    """Refresh the per-block latent summary rows touched by a scatter.
+
+    ``pages[key + "_blkmean"]/[key + "_blkmax"]`` are [n_blocks, d_c] f32
+    (core/cache.py block-summary leaves).  For every written slot's block,
+    recompute the masked mean / absmax over that block's VALID rows from the
+    just-updated pool content (dequantized for an int8 pool, so summaries are
+    always f32 statistics of what attention will actually read).  Valid-row
+    count = max written offset + 1 — writes within a block are sequential, so
+    the newest offset in this call is the block's live height; a truncated
+    block (speculative rejection / preemption) is re-summarized by its next
+    write before any read.  Duplicate blocks in one call first scatter-max
+    their offsets, then every duplicate writes the identical summary —
+    order-independent.  Mutates ``pages`` in place (callers own the dict).
+    """
+    mean_buf = pages[key + "_blkmean"]
+    n_blocks, d_c = mean_buf.shape
+    content = pages[key]                                     # post-write
+    n_slots = content.shape[0]
+    bs = n_slots // n_blocks
+    blk = slot_mapping // bs                                 # [N] (oob → drop)
+    off = slot_mapping % bs
+    maxoff = jnp.zeros((n_blocks,), jnp.int32).at[blk].max(
+        off + 1, mode="drop")
+    counts = maxoff[blk]                                     # per-entry, agree
+    rows_idx = (blk * bs)[:, None] + jnp.arange(bs)[None, :]  # [N, bs]
+    rows_idx = jnp.clip(rows_idx, 0, n_slots - 1)
+    rows = content[rows_idx].astype(jnp.float32)             # [N, bs, d_c]
+    if key + "_scale" in pages:
+        rows = rows * pages[key + "_scale"][rows_idx][..., None]
+    mask = (jnp.arange(bs)[None, :] < counts[:, None])[..., None]
+    cnt = jnp.maximum(counts, 1).astype(jnp.float32)[:, None]
+    mean = jnp.where(mask, rows, 0.0).sum(axis=1) / cnt
+    amax = jnp.max(jnp.where(mask, jnp.abs(rows), 0.0), axis=1)
+    pages[key + "_blkmean"] = mean_buf.at[blk].set(mean, mode="drop")
+    pages[key + "_blkmax"] = pages[key + "_blkmax"].at[blk].set(
+        amax, mode="drop")
 
 
 def _page_latents(pages):
@@ -504,13 +546,23 @@ def apply_verify_paged(params, cfg, buffers, x, pages, slot_mapping,
 def apply_decode_paged(params, cfg, buffers, x, pages, slot_mapping,
                        block_tables, lengths, block_size: int,
                        use_kernel: bool = True, constrain=lambda n, t: t,
-                       mesh=None, tp_axis: str = "model"):
+                       mesh=None, tp_axis: str = "model",
+                       sparse_topk: int = 0, sparse_recent: int = 0):
     """Absorbed decode over the block pool — one token per serving slot.
 
     x [B,1,d]; lengths [B] live length *including* the new token (0 for
     inactive lanes, whose writes hit the sentinel slot and whose attention
     output is zeroed); slot_mapping [B]; block_tables [B,max_blocks].
     → (out [B,1,d], new_pages)
+
+    ``sparse_topk > 0`` switches to latent-space sparse decode: the query is
+    scored against the pool's per-block summaries (written by the scatter
+    above, so the newest token is always visible) and only the top-k blocks
+    plus the ``sparse_recent`` newest are attended — O(k·block) per token.
+    Requires a ``block_summaries=True`` pool.  Selection runs on the FULL-head
+    query before any tensor-parallel split, so every shard walks identical
+    blocks.  ``sparse_topk + sparse_recent >= max_blocks`` selects the whole
+    chain and is bit-identical to dense (docs/serving.md, tests/test_sparse.py).
     """
     dt = x.dtype
     B = x.shape[0]
@@ -532,7 +584,32 @@ def apply_decode_paged(params, cfg, buffers, x, pages, slot_mapping,
     from repro.kernels import ops as kops
     K_e, (C_k, C_v) = new_pages["k_e"], _page_latents(new_pages)
     scales = _page_scales(new_pages)
-    if _tp(mesh, tp_axis) > 1:
+    if sparse_topk > 0:
+        lat_key = "c" if "c" in new_pages else "c_k"
+        mb = block_tables.shape[1]
+        num_sel = min(sparse_topk + sparse_recent, mb)
+        sel_tables, sel_counts = kops.select_topk_blocks(
+            q_lat.reshape(B, nh, -1).astype(jnp.float32),
+            new_pages[lat_key + "_blkmean"], new_pages[lat_key + "_blkmax"],
+            block_tables, lengths, block_size, num_sel, sparse_recent)
+        if _tp(mesh, tp_axis) > 1:
+            o = kops.elite_decode_sparse_paged_tp(
+                q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k,
+                C_v, scales, sel_tables, sel_counts, q_group=G,
+                scale=dh ** -0.5, block_size=block_size, mesh=mesh,
+                tp_axis=tp_axis, force_xla=not use_kernel)
+        elif scales is None:
+            o = kops.elite_decode_sparse_paged(
+                q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k,
+                C_v, sel_tables, sel_counts, q_group=G, scale=dh ** -0.5,
+                block_size=block_size, force_xla=not use_kernel)
+        else:
+            o = kops.elite_decode_sparse_paged_q8(
+                q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k,
+                C_v, *scales, sel_tables, sel_counts, q_group=G,
+                scale=dh ** -0.5, block_size=block_size,
+                force_xla=not use_kernel)
+    elif _tp(mesh, tp_axis) > 1:
         o = kops.elite_decode_paged_tp(
             q_e.reshape(B, nh, -1), q_lat.reshape(B, nh, -1), K_e, C_k, C_v,
             scales, block_tables, lengths, q_group=G, scale=dh ** -0.5,

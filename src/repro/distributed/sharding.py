@@ -211,6 +211,11 @@ def serving_page_pspecs(cfg: ModelConfig, plan: MeshPlan) -> Dict[str, P]:
         specs[name] = P()
     for name in ("k_e_scale", "c_scale", "c_k_scale", "c_v_scale"):
         specs[name] = P()
+    # sparse-decode block summaries [n_super, num_blocks, d_c] (head-shared
+    # latent space, f32): replicate — block selection is computed once per
+    # step and must be shard-invariant for the bit-identity wall to hold
+    for name in ("c_blkmean", "c_blkmax", "c_k_blkmean", "c_k_blkmax"):
+        specs[name] = P()
     return specs
 
 

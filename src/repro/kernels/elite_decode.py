@@ -380,6 +380,248 @@ def elite_decode_paged_q8(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
 
 
 # ---------------------------------------------------------------------------
+# sparse paged decode: walk a top-k SELECTION of blocks, not the whole chain
+# ---------------------------------------------------------------------------
+
+def _sparse_kernel(sel_tables_ref,            # scalar-prefetch [B, W] int32
+                   sel_counts_ref,            # scalar-prefetch [B, W] int32
+                   q_e_ref, q_lat_ref, k_e_ref, c_k_ref, c_v_ref,
+                   o_ref,
+                   acc_ref, m_ref, l_ref,
+                   *, scale: float, num_sel: int):
+    """``_paged_kernel`` where grid dim 2 walks ``sel_tables`` — the top-k
+    block selection from ``ref.py::select_topk_blocks`` — instead of the full
+    block chain.  The length mask becomes a per-block row count
+    (``sel_counts[b, sb]``; 0 skips the block entirely), so the kernel does
+    O(k·block) work per token.  Selected blocks arrive in ascending chain
+    order; with the full chain selected the walk, mask, and accumulation
+    order equal the dense kernel's exactly (the bit-identity wall)."""
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    count = sel_counts_ref[b, sb]
+
+    @pl.when(count > 0)
+    def _step():
+        q_e = q_e_ref[0, 0]                           # [G, 2r]
+        q_lat = q_lat_ref[0, 0]                       # [G, d_c]
+        k_e = k_e_ref[0, :, 0, :]                     # [block_size, 2r]
+        c_k = c_k_ref[0]                              # [block_size, d_c]
+        s = jax.lax.dot_general(
+            q_e, k_e, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [G, block_size]
+        s += jax.lax.dot_general(
+            q_lat, c_k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s *= scale
+        off = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(off < count, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(c_v_ref.dtype), c_v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [G, d_c]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(sb == num_sel - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def elite_decode_sparse_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                              sel_tables, sel_counts, q_group: int,
+                              scale: float, block_size: int,
+                              interpret: bool = False):
+    """See kernels/ref.py::elite_decode_sparse_paged_ref for exact semantics.
+
+    Pages as in ``elite_decode_paged``; ``sel_tables [B, W]`` int32 physical
+    block ids and ``sel_counts [B, W]`` int32 valid rows per selected block
+    (0 ⇒ skip; all-0 lanes produce zeros) come from
+    ``ref.py::select_topk_blocks``.  →  o [B,nh,d_c].
+    """
+    B, nh, r2 = q_e.shape
+    nkv = k_e_pages.shape[1]
+    d_c = c_k_pages.shape[-1]
+    G = q_group
+    assert nh == nkv * G, (nh, nkv, G)
+    assert k_e_pages.shape[0] % block_size == 0, (k_e_pages.shape, block_size)
+    n_blocks_pool = k_e_pages.shape[0] // block_size
+    W = sel_tables.shape[1]
+    assert sel_tables.shape == (B, W) and sel_counts.shape == (B, W)
+
+    q_e_g = q_e.reshape(B, nkv, G, r2)
+    q_lat_g = q_lat.reshape(B, nkv, G, d_c)
+    k_e_p = k_e_pages.reshape(n_blocks_pool, block_size, nkv, r2)
+    c_k_p = c_k_pages.reshape(n_blocks_pool, block_size, d_c)
+    c_v_p = c_v_pages.reshape(n_blocks_pool, block_size, d_c)
+
+    out = pl.pallas_call(
+        functools.partial(_sparse_kernel, scale=scale, num_sel=W),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nkv, W),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, r2), lambda b, h, s, st, ct: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, d_c), lambda b, h, s, st, ct: (b, h, 0, 0)),
+                # pool pages, indexed through the prefetched SELECTION table
+                pl.BlockSpec((1, block_size, 1, r2),
+                             lambda b, h, s, st, ct: (st[b, s], 0, h, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, st, ct: (st[b, s], 0, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, st, ct: (st[b, s], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, d_c), lambda b, h, s, st, ct: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, d_c), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nkv, G, d_c), c_v_pages.dtype),
+        interpret=interpret,
+        name="elite_decode_sparse_paged",
+    )(sel_tables, sel_counts, q_e_g, q_lat_g, k_e_p, c_k_p, c_v_p)
+    return out.reshape(B, nh, d_c)
+
+
+def _sparse_kernel_q8(sel_tables_ref,         # scalar-prefetch [B, W] int32
+                      sel_counts_ref,         # scalar-prefetch [B, W] int32
+                      q_e_ref, q_lat_ref, k_e_ref, c_k_ref, c_v_ref,
+                      k_s_ref, ck_s_ref, cv_s_ref,
+                      o_ref,
+                      acc_ref, m_ref, l_ref,
+                      *, scale: float, num_sel: int):
+    """``_sparse_kernel`` over int8 pages: the selection walk also pulls each
+    page's per-slot f32 scales and dequantizes in-register, exactly like
+    ``_paged_kernel_q8``."""
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    count = sel_counts_ref[b, sb]
+
+    @pl.when(count > 0)
+    def _step():
+        q_e = q_e_ref[0, 0]                           # [G, 2r]
+        q_lat = q_lat_ref[0, 0]                       # [G, d_c]
+        k_s = k_s_ref[0]                              # [block_size]
+        ck_s = ck_s_ref[0]
+        k_e = k_e_ref[0, :, 0, :].astype(jnp.float32) \
+            * k_s[:, None]                            # [block_size, 2r]
+        c_k = c_k_ref[0].astype(jnp.float32) \
+            * ck_s[:, None]                           # [block_size, d_c]
+        s = jax.lax.dot_general(
+            q_e, k_e, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [G, block_size]
+        s += jax.lax.dot_general(
+            q_lat, c_k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s *= scale
+        off = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(off < count, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        c_v = c_v_ref[0].astype(jnp.float32) * cv_s_ref[0][:, None]
+        pv = jax.lax.dot_general(
+            p, c_v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [G, d_c]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(sb == num_sel - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def elite_decode_sparse_paged_q8(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                                 k_e_scale, c_k_scale, c_v_scale,
+                                 sel_tables, sel_counts, q_group: int,
+                                 scale: float, block_size: int,
+                                 interpret: bool = False):
+    """See kernels/ref.py::elite_decode_sparse_paged_q8_ref for semantics.
+
+    ``elite_decode_sparse_paged`` over int8 pages + per-slot f32 scales;
+    output is always f32.
+    """
+    B, nh, r2 = q_e.shape
+    nkv = k_e_pages.shape[1]
+    d_c = c_k_pages.shape[-1]
+    G = q_group
+    assert nh == nkv * G, (nh, nkv, G)
+    assert k_e_pages.shape[0] % block_size == 0, (k_e_pages.shape, block_size)
+    n_blocks_pool = k_e_pages.shape[0] // block_size
+    W = sel_tables.shape[1]
+    assert sel_tables.shape == (B, W) and sel_counts.shape == (B, W)
+
+    q_e_g = q_e.astype(jnp.float32).reshape(B, nkv, G, r2)
+    q_lat_g = q_lat.astype(jnp.float32).reshape(B, nkv, G, d_c)
+    k_e_p = k_e_pages.reshape(n_blocks_pool, block_size, nkv, r2)
+    c_k_p = c_k_pages.reshape(n_blocks_pool, block_size, d_c)
+    c_v_p = c_v_pages.reshape(n_blocks_pool, block_size, d_c)
+    k_s_p = k_e_scale.reshape(n_blocks_pool, block_size)
+    ck_s_p = c_k_scale.reshape(n_blocks_pool, block_size)
+    cv_s_p = c_v_scale.reshape(n_blocks_pool, block_size)
+
+    out = pl.pallas_call(
+        functools.partial(_sparse_kernel_q8, scale=scale, num_sel=W),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nkv, W),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, r2), lambda b, h, s, st, ct: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, d_c), lambda b, h, s, st, ct: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_size, 1, r2),
+                             lambda b, h, s, st, ct: (st[b, s], 0, h, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, st, ct: (st[b, s], 0, 0)),
+                pl.BlockSpec((1, block_size, d_c),
+                             lambda b, h, s, st, ct: (st[b, s], 0, 0)),
+                pl.BlockSpec((1, block_size),
+                             lambda b, h, s, st, ct: (st[b, s], 0)),
+                pl.BlockSpec((1, block_size),
+                             lambda b, h, s, st, ct: (st[b, s], 0)),
+                pl.BlockSpec((1, block_size),
+                             lambda b, h, s, st, ct: (st[b, s], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, d_c), lambda b, h, s, st, ct: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, d_c), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nkv, G, d_c), jnp.float32),
+        interpret=interpret,
+        name="elite_decode_sparse_paged_q8",
+    )(sel_tables, sel_counts, q_e_g, q_lat_g, k_e_p, c_k_p, c_v_p,
+      k_s_p, ck_s_p, cv_s_p)
+    return out.reshape(B, nh, d_c)
+
+
+# ---------------------------------------------------------------------------
 # paged verify: k+1-token speculative windows, multi-query over the block table
 # ---------------------------------------------------------------------------
 
@@ -692,3 +934,27 @@ def elite_verify_paged_q8_xla(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
                                      c_v_pages, k_e_scale, c_k_scale,
                                      c_v_scale, block_tables, q_offsets,
                                      lengths, q_group, scale, block_size)
+
+
+def elite_decode_sparse_paged_xla(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                                  sel_tables, sel_counts, q_group: int,
+                                  scale: float, block_size: int):
+    """Gather-based XLA fallback for the sparse decode kernel: gather only
+    the [B, W·block_size] selected slots, then the shared masked oracle."""
+    from repro.kernels.ref import elite_decode_sparse_paged_ref
+    return elite_decode_sparse_paged_ref(q_e, q_lat, k_e_pages, c_k_pages,
+                                         c_v_pages, sel_tables, sel_counts,
+                                         q_group, scale, block_size)
+
+
+def elite_decode_sparse_paged_q8_xla(q_e, q_lat, k_e_pages, c_k_pages,
+                                     c_v_pages, k_e_scale, c_k_scale,
+                                     c_v_scale, sel_tables, sel_counts,
+                                     q_group: int, scale: float,
+                                     block_size: int):
+    """XLA fallback for the int8 sparse decode kernel."""
+    from repro.kernels.ref import elite_decode_sparse_paged_q8_ref
+    return elite_decode_sparse_paged_q8_ref(q_e, q_lat, k_e_pages, c_k_pages,
+                                            c_v_pages, k_e_scale, c_k_scale,
+                                            c_v_scale, sel_tables, sel_counts,
+                                            q_group, scale, block_size)

@@ -148,6 +148,95 @@ def elite_decode_paged_q8(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
 
 
 @functools.partial(jax.jit,
+                   static_argnames=("block_size", "num_sel", "recent"))
+def select_topk_blocks(q_lat, blk_mean, blk_max, block_tables, lengths,
+                       block_size: int, num_sel: int, recent: int):
+    """Latent-space block selection for sparse decode — see
+    kernels/ref.py::select_topk_blocks.  Runs OUTSIDE any tensor-parallel
+    shard_map on the full-head ``q_lat`` so the selection is shard-invariant;
+    its [B, W] outputs feed the sparse kernels as scalar prefetch."""
+    from repro.kernels.ref import select_topk_blocks as _sel
+    return _sel(q_lat, blk_mean, blk_max, block_tables, lengths, block_size,
+                num_sel, recent)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("q_group", "scale", "block_size", "force_xla"))
+def _elite_decode_sparse_paged_jit(q_e, q_lat, k_e_pages, c_k_pages,
+                                   c_v_pages, sel_tables, sel_counts,
+                                   q_group: int, scale: float,
+                                   block_size: int, force_xla: bool = False):
+    if force_xla or _interpret():
+        return _ed.elite_decode_sparse_paged_xla(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, sel_tables,
+            sel_counts, q_group, scale, block_size)
+    return _ed.elite_decode_sparse_paged(
+        q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, sel_tables, sel_counts,
+        q_group, scale, block_size, interpret=False)
+
+
+def elite_decode_sparse_paged(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                              sel_tables, sel_counts, q_group: int,
+                              scale: float, block_size: int,
+                              force_xla: bool = False):
+    """Sparse paged decode attention: walk only the ``[B, W]`` selected
+    blocks (``select_topk_blocks``) instead of the full chain — O(k·block)
+    per token.  With the full chain selected the output is bit-identical to
+    ``elite_decode_paged`` (the sparse recall wall, docs/serving.md).
+
+    TPU: Pallas kernel walking the prefetched selection table.
+    CPU / ``force_xla``: gather-based XLA fallback with identical semantics.
+    """
+    sp = _span("elite_decode_sparse_paged", q_e)
+    if sp is None:
+        return _elite_decode_sparse_paged_jit(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, sel_tables,
+            sel_counts, q_group, scale, block_size, force_xla)
+    with sp:
+        return jax.block_until_ready(_elite_decode_sparse_paged_jit(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, sel_tables,
+            sel_counts, q_group, scale, block_size, force_xla))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("q_group", "scale", "block_size", "force_xla"))
+def _elite_decode_sparse_paged_q8_jit(q_e, q_lat, k_e_pages, c_k_pages,
+                                      c_v_pages, k_e_scale, c_k_scale,
+                                      c_v_scale, sel_tables, sel_counts,
+                                      q_group: int, scale: float,
+                                      block_size: int, force_xla: bool = False):
+    if force_xla or _interpret():
+        return _ed.elite_decode_sparse_paged_q8_xla(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale,
+            c_k_scale, c_v_scale, sel_tables, sel_counts, q_group, scale,
+            block_size)
+    return _ed.elite_decode_sparse_paged_q8(
+        q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale, c_k_scale,
+        c_v_scale, sel_tables, sel_counts, q_group, scale, block_size,
+        interpret=False)
+
+
+def elite_decode_sparse_paged_q8(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                                 k_e_scale, c_k_scale, c_v_scale,
+                                 sel_tables, sel_counts, q_group: int,
+                                 scale: float, block_size: int,
+                                 force_xla: bool = False):
+    """``elite_decode_sparse_paged`` over an int8 pool with fused in-register
+    dequant; output is f32 regardless of page dtype."""
+    sp = _span("elite_decode_sparse_paged_q8", q_e)
+    if sp is None:
+        return _elite_decode_sparse_paged_q8_jit(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale,
+            c_k_scale, c_v_scale, sel_tables, sel_counts, q_group, scale,
+            block_size, force_xla)
+    with sp:
+        return jax.block_until_ready(_elite_decode_sparse_paged_q8_jit(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, k_e_scale,
+            c_k_scale, c_v_scale, sel_tables, sel_counts, q_group, scale,
+            block_size, force_xla))
+
+
+@functools.partial(jax.jit,
                    static_argnames=("q_group", "scale", "block_size", "force_xla"))
 def _elite_verify_paged_jit(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
                             block_tables, q_offsets, lengths, q_group: int,
@@ -362,6 +451,52 @@ def elite_decode_paged_tp(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, scales,
             o = elite_decode_paged_q8(bq_e, bq_lat, k_e, c_k, c_v, ks, cks,
                                       cvs, bt, ln, q_group, scale, block_size,
                                       force_xla)
+        return jax.lax.all_gather(o, tp_axis, axis=1, tiled=True)
+
+    return _shard_map(body, mesh, tuple(specs), _P(None, None, None))(*args)
+
+
+def elite_decode_sparse_paged_tp(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                                 scales, sel_tables, sel_counts, q_group: int,
+                                 scale: float, block_size: int, mesh,
+                                 tp_axis: str = "model",
+                                 force_xla: bool = False):
+    """Tensor-parallel sparse paged decode.  Identical head-sharding contract
+    to :func:`elite_decode_paged_tp`; ``sel_tables``/``sel_counts`` replace
+    the block table + lengths and are REPLICATED — the selection was computed
+    once on the full-head query (``select_topk_blocks``), so every shard
+    walks the same blocks and the gathered output is bitwise identical to the
+    single-device sparse call."""
+    if mesh.shape[tp_axis] == 1:
+        if scales is None:
+            return elite_decode_sparse_paged(
+                q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, sel_tables,
+                sel_counts, q_group, scale, block_size, force_xla)
+        return elite_decode_sparse_paged_q8(
+            q_e, q_lat, k_e_pages, c_k_pages, c_v_pages, *scales, sel_tables,
+            sel_counts, q_group, scale, block_size, force_xla)
+
+    heads = _P(None, tp_axis, None)
+    args = [q_e, q_lat, k_e_pages, c_k_pages, c_v_pages]
+    specs = [heads, heads, _P(None, tp_axis, None),
+             _rep(c_k_pages), _rep(c_v_pages)]
+    if scales is not None:
+        args += list(scales)
+        specs += [_rep(s) for s in scales]
+    args += [sel_tables, sel_counts]
+    specs += [_rep(sel_tables), _rep(sel_counts)]
+
+    def body(*xs):
+        if scales is None:
+            bq_e, bq_lat, k_e, c_k, c_v, st, ct = xs
+            o = elite_decode_sparse_paged(bq_e, bq_lat, k_e, c_k, c_v, st, ct,
+                                          q_group, scale, block_size,
+                                          force_xla)
+        else:
+            bq_e, bq_lat, k_e, c_k, c_v, ks, cks, cvs, st, ct = xs
+            o = elite_decode_sparse_paged_q8(bq_e, bq_lat, k_e, c_k, c_v, ks,
+                                             cks, cvs, st, ct, q_group, scale,
+                                             block_size, force_xla)
         return jax.lax.all_gather(o, tp_axis, axis=1, tiled=True)
 
     return _shard_map(body, mesh, tuple(specs), _P(None, None, None))(*args)

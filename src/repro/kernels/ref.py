@@ -5,6 +5,30 @@ import jax
 import jax.numpy as jnp
 
 
+def _decode_masked(q_e, q_lat, k_e, c_k, c_v, valid, q_group: int,
+                   scale: float) -> jnp.ndarray:
+    """Shared decode-attention core with an explicit key-validity mask
+    ``valid [B, 1, S]``.  Both the dense and the sparse paged oracles route
+    through here, so when their gathered arrays and masks are equal the
+    outputs are *bitwise* equal — the sparse ``k >= n_blocks`` identity wall
+    rests on this sharing."""
+    B, nh, r2 = q_e.shape
+    nkv = k_e.shape[2]
+    S = k_e.shape[1]
+    qe_g = q_e.reshape(B, nkv, q_group, r2)
+    s_e = jnp.einsum("bhge,bkhe->bhgk", qe_g, k_e, preferred_element_type=jnp.float32)
+    s_e = s_e.reshape(B, nh, S)
+    s_lat = jnp.einsum("bhc,bkc->bhk", q_lat, c_k, preferred_element_type=jnp.float32)
+    s = (s_e + s_lat) * scale
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no visible key (empty serving slots) attend to nothing →
+    # zero output (softmax over an all-masked row would otherwise yield a
+    # uniform p)
+    p = jnp.where(jnp.any(valid, axis=-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhk,bkc->bhc", p.astype(c_v.dtype), c_v)
+
+
 def elite_decode_ref(q_e, q_lat, k_e, c_k, c_v, lengths, q_group: int,
                      scale: float) -> jnp.ndarray:
     """Absorbed EliteKV decode attention.
@@ -17,21 +41,9 @@ def elite_decode_ref(q_e, q_lat, k_e, c_k, c_v, lengths, q_group: int,
     lengths [B] int32   valid cache length per sequence
     →     [B, nh, dc]   latent attention output (pre bv/wo absorption)
     """
-    B, nh, r2 = q_e.shape
-    nkv = k_e.shape[2]
     S = k_e.shape[1]
-    qe_g = q_e.reshape(B, nkv, q_group, r2)
-    s_e = jnp.einsum("bhge,bkhe->bhgk", qe_g, k_e, preferred_element_type=jnp.float32)
-    s_e = s_e.reshape(B, nh, S)
-    s_lat = jnp.einsum("bhc,bkc->bhk", q_lat, c_k, preferred_element_type=jnp.float32)
-    s = (s_e + s_lat) * scale
     valid = jnp.arange(S)[None, None, :] < lengths[:, None, None]
-    s = jnp.where(valid, s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    # length-0 sequences (empty serving slots) attend to nothing → zero output
-    # (softmax over an all-masked row would otherwise yield a uniform p)
-    p = jnp.where(lengths[:, None, None] > 0, p, 0.0)
-    return jnp.einsum("bhk,bkc->bhc", p.astype(c_v.dtype), c_v)
+    return _decode_masked(q_e, q_lat, k_e, c_k, c_v, valid, q_group, scale)
 
 
 def elite_decode_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
@@ -56,6 +68,76 @@ def elite_decode_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
 
     return elite_decode_ref(q_e, q_lat, gather(k_e_pages), gather(c_k_pages),
                             gather(c_v_pages), lengths, q_group, scale)
+
+
+def select_topk_blocks(q_lat, blk_mean, blk_max, block_tables, lengths,
+                       block_size: int, num_sel: int, recent: int):
+    """Score resident blocks in latent space, pick the winners + recent tail.
+
+    q_lat   [B, nh, dc]            bk-absorbed query (ALL heads — selection
+                                   must be shard-invariant under TP)
+    blk_mean/blk_max [n_blocks, dc]  per-block latent summaries (valid-row
+                                   masked mean / absmax, f32)
+    block_tables [B, mb] int32; lengths [B] int32; ``num_sel`` = total
+    selection width W (top-k + recent tail); ``recent`` newest resident
+    blocks are always forced in.
+
+    score_j = Σ_h q_lat·mean_j + |q_lat|·absmax_j — the mean term estimates
+    the block's average logit, the absmax term upper-bounds its peak.
+
+    Returns ``(sel_tables [B, W] int32 physical block ids,
+    sel_counts [B, W] int32 valid rows per selected block)``.  Selected
+    logical indices are sorted ASCENDING so the sparse kernels accumulate
+    in dense chain order; with ``W >= n_chain`` the selection is exactly
+    the full chain and sparse decode is bit-identical to dense.
+    """
+    B, mb = block_tables.shape
+    bs = block_size
+    n_chain = -(-lengths // bs)                              # ceil, [B]
+    j = jnp.arange(mb, dtype=jnp.int32)[None, :]             # logical index
+    mean = blk_mean[block_tables]                            # [B, mb, dc]
+    amax = blk_max[block_tables]
+    score = (jnp.einsum("bhc,bjc->bj", q_lat, mean,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhc,bjc->bj", jnp.abs(q_lat), amax,
+                          preferred_element_type=jnp.float32))
+    resident = j < n_chain[:, None]
+    tail = resident & (j >= n_chain[:, None] - recent)
+    score = jnp.where(resident, score, -1e30)
+    score = jnp.where(tail, 1e30, score)                     # force recents
+    sel = jax.lax.top_k(score, min(num_sel, mb))[1]          # [B, W]
+    sel = jnp.sort(sel, axis=-1).astype(jnp.int32)
+    sel_tables = jnp.take_along_axis(block_tables, sel, axis=1)
+    sel_counts = jnp.clip(lengths[:, None] - sel * bs, 0, bs).astype(jnp.int32)
+    return sel_tables, sel_counts
+
+
+def _sparse_valid(sel_counts, block_size: int):
+    """[B, W] per-block counts → [B, 1, W·bs] row-validity mask.  For the
+    full chain this equals the dense ``pos < length`` mask elementwise."""
+    B, W = sel_counts.shape
+    offs = jnp.tile(jnp.arange(block_size, dtype=jnp.int32), W)   # [W·bs]
+    counts = jnp.repeat(sel_counts, block_size, axis=1)           # [B, W·bs]
+    return (offs[None, :] < counts)[:, None, :]
+
+
+def elite_decode_sparse_paged_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
+                                  sel_tables, sel_counts, q_group: int,
+                                  scale: float, block_size: int) -> jnp.ndarray:
+    """Sparse paged decode oracle: gather only the SELECTED blocks, then the
+    shared masked core.  ``sel_tables/sel_counts [B, W]`` come from
+    ``select_topk_blocks``; a count of 0 contributes nothing (pad = block 0).
+    With the full chain selected the gathered arrays and mask equal the dense
+    oracle's → bitwise-identical output."""
+    B, W = sel_tables.shape
+
+    def gather(pages):
+        paged = pages.reshape((-1, block_size) + pages.shape[1:])
+        return paged[sel_tables].reshape((B, W * block_size) + pages.shape[1:])
+
+    valid = _sparse_valid(sel_counts, block_size)
+    return _decode_masked(q_e, q_lat, gather(k_e_pages), gather(c_k_pages),
+                          gather(c_v_pages), valid, q_group, scale)
 
 
 def elite_verify_ref(q_e, q_lat, k_e, c_k, c_v, q_offsets, lengths,
@@ -133,6 +215,20 @@ def elite_decode_paged_q8_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,
                                      k_e_scale, c_k_scale, c_v_scale)
     return elite_decode_paged_ref(q_e, q_lat, k_e, c_k, c_v, block_tables,
                                   lengths, q_group, scale, block_size)
+
+
+def elite_decode_sparse_paged_q8_ref(q_e, q_lat, k_e_pages, c_k_pages,
+                                     c_v_pages, k_e_scale, c_k_scale,
+                                     c_v_scale, sel_tables, sel_counts,
+                                     q_group: int, scale: float,
+                                     block_size: int) -> jnp.ndarray:
+    """Quantized sparse decode oracle: dequantize every slot, then the f32
+    sparse oracle — the same contract as ``elite_decode_paged_q8_ref``."""
+    k_e, c_k, c_v = dequantize_pages(k_e_pages, c_k_pages, c_v_pages,
+                                     k_e_scale, c_k_scale, c_v_scale)
+    return elite_decode_sparse_paged_ref(q_e, q_lat, k_e, c_k, c_v,
+                                         sel_tables, sel_counts, q_group,
+                                         scale, block_size)
 
 
 def elite_verify_paged_q8_ref(q_e, q_lat, k_e_pages, c_k_pages, c_v_pages,

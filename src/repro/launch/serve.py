@@ -102,7 +102,9 @@ def serve_stream(params, buffers, cfg, args):
         admission=args.admission, eviction=args.eviction,
         speculate_k=args.speculate, draft_rank=args.draft_rank,
         prefix_cache=args.prefix_cache,
-        cache_dtype="int8" if args.pool_dtype == "int8" else jnp.float32)
+        cache_dtype="int8" if args.pool_dtype == "int8" else jnp.float32,
+        sparse_topk_blocks=args.sparse_topk,
+        sparse_recent_blocks=args.sparse_recent)
     # multi-device serving: a (dp, tp) mesh sliced into per-replica submeshes
     # (launch/mesh.py) — tp head-shards attention inside each replica, dp adds
     # independent scheduler replicas behind the router (runtime/router.py)
@@ -176,6 +178,12 @@ def serve_stream(params, buffers, cfg, args):
               f"mean {report.mean_accepted:.2f}/window) over "
               f"{report.draft_forwards} draft + {report.decode_steps} verify "
               f"forwards -> {report.tokens_per_forward:.2f} tokens/forward")
+    if scfg.sparse_topk_blocks:
+        print(f"sparse decode [topk={report.sparse_topk} "
+              f"recent={report.sparse_recent}]: "
+              f"mean {report.mean_selected_blocks:.1f}/"
+              f"{report.mean_candidate_blocks:.1f} blocks attended per lane "
+              f"over {report.sparse_steps} decode forwards")
     if scfg.prefix_cache:
         print(f"prefix cache: hit_rate={report.prefix_cache_hit_rate:.2f} "
               f"({report.prefix_cache_hit_tokens} prompt tokens served from "
@@ -261,6 +269,15 @@ def main(argv=None):
                     default="recompute",
                     help="preemption mechanism: recompute the evicted prefix "
                          "or swap the cached streams to host memory")
+    ap.add_argument("--sparse-topk", type=int, default=0,
+                    help="latent-space sparse decode: attend only the top-K "
+                         "blocks scored against per-block latent summaries, "
+                         "plus --sparse-recent newest blocks (0 = dense; "
+                         "K >= blocks-per-chain reproduces dense exactly)")
+    ap.add_argument("--sparse-recent", type=int, default=2,
+                    help="newest chain blocks always attended under "
+                         "--sparse-topk (the in-progress block plus a short "
+                         "local-context tail)")
     ap.add_argument("--speculate", type=int, default=0,
                     help="self-speculative decode: draft tokens per resident "
                          "per step (0 = plain one-token decode)")
@@ -304,6 +321,20 @@ def main(argv=None):
 
     if args.tp < 1 or args.dp < 1:
         ap.error("--tp and --dp must be >= 1")
+    if args.sparse_topk < 0 or args.sparse_recent < 0:
+        ap.error("--sparse-topk and --sparse-recent must be >= 0")
+    if args.sparse_topk > 0 and args.speculate > 0:
+        ap.error("--sparse-topk and --speculate are mutually exclusive "
+                 "(the multi-query verify window has no single selection "
+                 "query; see docs/serving.md)")
+    if args.sparse_topk > 0 and not args.stream:
+        ap.error("--sparse-topk selects blocks in the paged decode path; "
+                 "add --stream")
+    if (args.sparse_topk > 0 and args.admission == "preempt"
+            and args.eviction == "recompute"):
+        ap.error("--sparse-topk with preempt admission needs --eviction swap "
+                 "(recompute prefill cannot reproduce sparse-generated "
+                 "streams; docs/serving.md#sparse-decode)")
     if (args.tp > 1 or args.dp > 1) and not args.stream:
         ap.error("--tp/--dp shard the paged serving path; add --stream")
     if args.tp > 1 and cfg.elitekv.enabled and cfg.n_kv_heads % args.tp:

@@ -154,7 +154,9 @@ def _run_layer(p, b, cfg, p_pos: int, h, positions, mode, cache, index,
                     p["attn"], cfg, b, hn, cache, paged["slot_mapping"],
                     paged["block_tables"], paged["lengths"],
                     paged["block_size"], use_kernel=paged.get("use_kernel", True),
-                    constrain=constrain, mesh=paged.get("mesh"))
+                    constrain=constrain, mesh=paged.get("mesh"),
+                    sparse_topk=paged.get("sparse_topk", 0),
+                    sparse_recent=paged.get("sparse_recent", 0))
             else:
                 a, new_cache = elite_attention.apply_decode(
                     p["attn"], cfg, b, hn, index, cache, constrain=constrain)
@@ -366,20 +368,25 @@ def apply_prefill_paged(params, buffers, cfg, batch, pages, slot_mapping,
 def apply_decode_paged(params, buffers, cfg, batch, pages, slot_mapping,
                        block_tables, lengths, block_size: int,
                        use_kernel: bool = True, moe_impl="ragged", mesh=None,
-                       constrain=_NOOP, data_axes=("data",)):
+                       constrain=_NOOP, data_axes=("data",),
+                       sparse_topk: int = 0, sparse_recent: int = 0):
     """One decode step for every serving slot, reading/writing pool pages.
 
     ``lengths`` [B] int32: live length *including* this token (0 = idle lane);
     ``slot_mapping`` [B] flat write slot for the new token; ``block_tables``
     [B, max_blocks].  Shapes are slot-count-static, so one jit covers the
     whole serving run regardless of which lanes are live.
+    ``sparse_topk > 0`` enables latent-space sparse decode (top-k blocks +
+    ``sparse_recent`` newest; needs a ``block_summaries=True`` pool — see
+    core/elite_attention.py::apply_decode_paged).
     → (logits [B,1,V], new_pages).
     """
     assert cfg.elitekv.enabled, "paged serving requires an EliteKV cache"
     h = _embed_step(params, cfg, batch)
     paged = {"slot_mapping": slot_mapping, "block_tables": block_tables,
              "lengths": lengths, "block_size": block_size,
-             "use_kernel": use_kernel, "mesh": mesh}
+             "use_kernel": use_kernel, "mesh": mesh,
+             "sparse_topk": sparse_topk, "sparse_recent": sparse_recent}
     h, aux, new_pages = _scan_blocks(
         params, buffers, cfg, h, None, mode="decode",
         cache={"blocks": pages}, moe_impl=moe_impl, mesh=mesh,

@@ -102,12 +102,16 @@ class ReplicaBoard:
             (self.waiting, self.resident, self.submitted, self.retired)
 
     def imbalance(self) -> float:
-        """max/min lifetime admissions across replicas (1.0 = perfectly even,
-        inf = some replica never saw a request)."""
-        lo, hi = min(self.routed), max(self.routed)
-        if hi == 0:
+        """max/min lifetime admissions across replicas that saw traffic
+        (1.0 = perfectly even).  Replicas with zero admissions are excluded:
+        early in a run (or with fewer requests than replicas) some replicas
+        legitimately have not been routed to yet, and folding them in made
+        the metric inf — which poisoned every downstream mean and JSON
+        export.  No traffic anywhere reports 1.0, not 0/0."""
+        active = [r for r in self.routed if r > 0]
+        if not active:
             return 1.0
-        return float("inf") if lo == 0 else hi / lo
+        return max(active) / min(active)
 
 
 class ReplicaTracer:

@@ -252,6 +252,13 @@ class SchedulerConfig:
                                           # the pool to symmetric absmax
                                           # quantization with per-token scales
                                           # (core/quant.py, docs/serving.md)
+    sparse_topk_blocks: int = 0           # latent-space sparse decode: attend
+                                          # only the top-k summary-scored
+                                          # blocks per lane (0 → dense decode;
+                                          # incompatible with speculate_k)
+    sparse_recent_blocks: int = 2         # newest blocks always attended when
+                                          # sparse decode is on (the local
+                                          # window every selection keeps)
 
     @property
     def max_blocks_per_seq(self) -> int:
@@ -273,21 +280,29 @@ def sample_tokens(logits, temps, top_ps, seeds, counts):
     """
 
     def one(lg, temp, top_p, seed, count):
-        key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
-        greedy = jnp.argmax(lg).astype(jnp.int32)
-        scaled = lg.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
-        order = jnp.argsort(-scaled)                # descending
-        sl = scaled[order]
-        probs = jax.nn.softmax(sl)
-        # nucleus: drop tokens whose preceding cumulative mass already covers
-        # top_p; the smallest covering set always keeps its first member
-        # (even at the top_p <= 0 boundary, where the cut would otherwise
-        # mask everything and sample from garbage)
-        cut = (jnp.cumsum(probs) - probs) >= top_p
-        cut = cut.at[0].set(False)
-        sl = jnp.where(cut, -jnp.inf, sl)
-        tok = order[jax.random.categorical(key, sl)].astype(jnp.int32)
-        return jnp.where(temp <= 0.0, greedy, tok)
+        def greedy(_):
+            return jnp.argmax(lg).astype(jnp.int32)
+
+        def sample(_):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+            scaled = lg.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
+            order = jnp.argsort(-scaled)            # descending
+            sl = scaled[order]
+            probs = jax.nn.softmax(sl)
+            # nucleus: drop tokens whose preceding cumulative mass already
+            # covers top_p; the smallest covering set always keeps its first
+            # member (even at the top_p <= 0 boundary, where the cut would
+            # otherwise mask everything and sample from garbage)
+            cut = (jnp.cumsum(probs) - probs) >= top_p
+            cut = cut.at[0].set(False)
+            sl = jnp.where(cut, -jnp.inf, sl)
+            return order[jax.random.categorical(key, sl)].astype(jnp.int32)
+
+        # temp <= 0 takes the argmax branch STRUCTURALLY — greedy lanes never
+        # route through the temperature division, so "temperature 0" is exact
+        # argmax rather than clamp-to-1e-6-shaped (tests/test_serve.py pins
+        # greedy == temp-0 identity)
+        return jax.lax.cond(temp <= 0.0, greedy, sample, None)
 
     return jax.vmap(one)(logits, temps, top_ps, seeds, counts)
 
@@ -435,7 +450,12 @@ class ServeReport:
     swap_outs: int = 0                    # preemptions served by host swap
     swap_ins: int = 0                     # swapped prefixes restored
     swapped_bytes: int = 0                # host↔device eviction traffic (out)
-    mean_occupancy: float = 0.0           # mean fraction of pool blocks in use
+    mean_occupancy: float = 0.0           # mean fraction of pool blocks
+                                          # REFERENCED by live chains (matches
+                                          # what admission sees as busy)
+    mean_occupancy_retained: float = 0.0  # mean fraction counting prefix-cache
+                                          # retained (refcount-0 LRU) blocks
+                                          # too — i.e. raw allocator usage
     mean_prefill_batch: float = 0.0       # mean lanes per chunked-prefill call
     speculate_k: int = 0                  # draft window size the run used
     draft_rank: int = 0                   # draft joint-factor rank (0 = full)
@@ -456,6 +476,11 @@ class ServeReport:
                                           # lookups (per-token, not per-request)
     cow_copies: int = 0                   # copy-on-write block privatizations
     blocks_retained: int = 0              # zero-ref cached blocks at run end
+    sparse_topk: int = 0                  # block top-k the run decoded with
+    sparse_recent: int = 0                # forced newest-block tail width
+    sparse_steps: int = 0                 # decode forwards that ran sparse
+    mean_selected_blocks: float = 0.0     # blocks attended per lane-step
+    mean_candidate_blocks: float = 0.0    # resident blocks per lane-step
     phase_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
     #   ^ wall ms per step phase over the whole run (keys == PHASES; a phase
     #     that never ran reports exactly 0.0).  ``other`` is the residual, so
@@ -490,6 +515,11 @@ class ServeReport:
         if self.pool_dtype not in ("float32", ""):
             q8 = (f" pool[{self.pool_dtype} "
                   f"{self.pool_bytes_per_token}B/tok]")
+        sp = ""
+        if self.sparse_topk:
+            sp = (f" sparse[k={self.sparse_topk}+{self.sparse_recent} "
+                  f"sel={self.mean_selected_blocks:.1f}/"
+                  f"{self.mean_candidate_blocks:.1f}]")
         return (f"completed={self.completed} steps={self.decode_steps} "
                 f"decoded={self.decoded_tokens} tok/s={self.tok_per_s:.1f} "
                 f"ttft_steps={self.ttft_steps_mean:.1f}{bucket} "
@@ -501,7 +531,7 @@ class ServeReport:
                 f"occ={self.mean_occupancy:.2f} [{self.admission}] "
                 f"preempt={self.preemptions}"
                 f"(swap {self.swap_outs}/{self.swap_ins}) "
-                f"prefill_batch={self.mean_prefill_batch:.1f}{spec}{pc}{q8}")
+                f"prefill_batch={self.mean_prefill_batch:.1f}{spec}{pc}{q8}{sp}")
 
 
 class Scheduler:
@@ -512,6 +542,27 @@ class Scheduler:
                  tracer=None, metrics=None):
         assert cfg.elitekv.enabled, "paged serving requires an EliteKV config"
         assert scfg.eviction in ("recompute", "swap"), scfg.eviction
+        # sparse decode scores single-token queries against block summaries;
+        # the multi-query verify window has no single selection query, so the
+        # speculative path stays dense — the combination is rejected outright
+        # rather than silently ignoring one of the knobs
+        assert scfg.sparse_topk_blocks == 0 or scfg.speculate_k == 0, \
+            "sparse_topk_blocks and speculate_k are mutually exclusive"
+        # recompute eviction re-prefills a preempted prefix DENSELY, but a
+        # token generated under partial sparse decode carries layer>=1
+        # streams shaped by sparse lower-layer attention — dense prefill
+        # cannot reproduce them, so recompute would silently fork the
+        # stream.  Swap restores the pages (and summary rows) byte-exactly;
+        # full selection width is exactly dense, so either keeps the
+        # preemption-invariance wall.  Reject the one unsound combination.
+        sparse_partial = (0 < scfg.sparse_topk_blocks and
+                          scfg.sparse_topk_blocks + scfg.sparse_recent_blocks
+                          < scfg.max_blocks_per_seq)
+        assert not (sparse_partial and scfg.admission == "preempt"
+                    and scfg.eviction == "recompute"), \
+            ("partial-width sparse decode requires eviction='swap' (or "
+             "admission='watermark'): recompute prefill cannot reproduce "
+             "sparse-generated streams")
         self.params, self.buffers, self.cfg, self.scfg = params, buffers, cfg, scfg
         self.trace = tracer or NULL_TRACER
         self.metrics = metrics or MetricsRegistry()
@@ -521,7 +572,8 @@ class Scheduler:
         # bit-identical either way (tests/test_sharded_serving.py).
         self.pool = PagedKVPool(cfg, scfg.num_blocks, scfg.block_size,
                                 dtype=scfg.cache_dtype, tracer=self.trace,
-                                mesh=mesh)
+                                mesh=mesh,
+                                block_summaries=scfg.sparse_topk_blocks > 0)
         self.bm = BlockManager(self.pool, policy=scfg.admission,
                                prefix_cache=scfg.prefix_cache)
         self.slots: List[Optional[Request]] = [None] * scfg.max_slots
@@ -529,7 +581,8 @@ class Scheduler:
         self.finished: List[Request] = []
         self.t = 0                          # simulated clock (decode steps)
         self._step_wall_ms: List[float] = []
-        self._occupancy: List[float] = []   # pool fill fraction per step
+        self._occupancy: List[float] = []   # referenced fill fraction per step
+        self._occupancy_retained: List[float] = []  # incl. LRU-retained blocks
         self.peak_slots = 0
         self.naive_blocks = 0
         self.prefill_chunks = 0             # prefill forward calls issued
@@ -563,7 +616,9 @@ class Scheduler:
         self._m_draft_accepted = m.counter(
             "serve_draft_accepted_total", "draft tokens that survived verify")
         self._m_blocks_used = m.gauge(
-            "serve_pool_blocks_used", "pool blocks currently allocated")
+            "serve_pool_blocks_used",
+            "pool blocks referenced by live chains (excludes prefix-cache "
+            "retained blocks; see serve_prefix_cache_blocks_retained)")
         self._m_slots = m.gauge(
             "serve_slots_occupied", "scheduler slots currently resident")
         self._m_step_ms = m.histogram(
@@ -609,6 +664,34 @@ class Scheduler:
         self._m_pool_quantized.set(1 if self.pool.quantized else 0)
         self._m_pool_bpt.set(self._pool_bpt)
         self._cow_synced = 0                # pool.cow_copies already metered
+        # sparse-decode family — registered ONLY when sparse decode is on
+        # (unlike the always-on families above, the summary leaves and
+        # selection stage simply don't exist in a dense run; check_trace
+        # enforces the family all-or-nothing instead of always-present)
+        self._sparse_steps = 0              # decode forwards with sparse on
+        self._sparse_selected = 0           # Σ blocks attended across lanes
+        self._sparse_candidate = 0          # Σ resident blocks across lanes
+        if scfg.sparse_topk_blocks > 0:
+            self._m_sparse_topk = m.gauge(
+                "serve_sparse_topk",
+                "top-k blocks scored into each sparse decode selection")
+            self._m_sparse_recent = m.gauge(
+                "serve_sparse_recent",
+                "newest blocks always attended by sparse decode")
+            self._m_sparse_steps = m.counter(
+                "serve_sparse_steps_total",
+                "decode forwards that ran with sparse block selection")
+            self._m_sparse_selected = m.counter(
+                "serve_sparse_selected_blocks_total",
+                "blocks attended across all sparse-decode lanes")
+            self._m_sparse_candidate = m.counter(
+                "serve_sparse_candidate_blocks_total",
+                "resident blocks eligible across all sparse-decode lanes")
+            self._m_sparse_hist = m.histogram(
+                "serve_sparse_selected_blocks",
+                "blocks attended per lane per sparse decode forward")
+            self._m_sparse_topk.set(scfg.sparse_topk_blocks)
+            self._m_sparse_recent.set(scfg.sparse_recent_blocks)
         # the draft shares params unless a real rank truncation is requested
         self.draft_params = (
             lm.make_draft_params(params, cfg, scfg.draft_rank)
@@ -638,6 +721,8 @@ class Scheduler:
                                          slot_mapping, block_tables, lengths,
                                          block_size=scfg.block_size,
                                          use_kernel=scfg.use_kernel,
+                                         sparse_topk=scfg.sparse_topk_blocks,
+                                         sparse_recent=scfg.sparse_recent_blocks,
                                          moe_impl=moe_impl, mesh=mesh)
 
         def _verify(params, buffers, tokens, pages, slot_mapping,
@@ -1062,6 +1147,13 @@ class Scheduler:
                            uid=req.uid, reason=req.finish_reason,
                            tokens=len(req.generated))
 
+    def _blocks_referenced(self) -> int:
+        """Pool blocks referenced by live chains — allocator usage minus the
+        refcount-0 blocks the prefix cache merely retains for reuse (those
+        are reclaimable, and admission already treats them as free)."""
+        retained = self.bm.prefix.num_retained if self.bm.prefix else 0
+        return self.pool.allocator.num_used - retained
+
     # -- one scheduler iteration -------------------------------------------
     def step(self) -> bool:
         """Admit + chunk-prefill + decode (or draft/verify) once.  Returns
@@ -1070,10 +1162,14 @@ class Scheduler:
         self._prefill_work()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         self.peak_slots = max(self.peak_slots, len(occupied))
-        self._m_blocks_used.set(self.pool.allocator.num_used)
+        # "used" means referenced by a live chain: prefix-cache-retained
+        # blocks (refcount 0, LRU-parked) are reclaimable on demand, so they
+        # count as free for admission and must not show as in-use here —
+        # they are reported separately via serve_prefix_cache_blocks_retained.
+        referenced = self._blocks_referenced()
+        self._m_blocks_used.set(referenced)
         self._m_slots.set(len(occupied))
-        self.trace.counter("pool_blocks_used", self.pool.allocator.num_used,
-                           track="pool")
+        self.trace.counter("pool_blocks_used", referenced, track="pool")
         alloc_bytes = (self.pool.allocator.num_used * self.scfg.block_size
                        * self._pool_bpt)
         self._m_pool_bytes.set(alloc_bytes)
@@ -1117,6 +1213,8 @@ class Scheduler:
                 grown[i] = cur
         active = [i for i in grown if self.slots[i] is not None]
         self._occupancy.append(
+            self._blocks_referenced() / self.pool.num_blocks)
+        self._occupancy_retained.append(
             self.pool.allocator.num_used / self.pool.num_blocks)
         if not active:
             return False
@@ -1164,6 +1262,28 @@ class Scheduler:
         self._step_wall_ms.append((time.perf_counter() - t0) * 1e3)
         self._m_step_ms.observe(self._step_wall_ms[-1])
         self._lane_steps += len(active)
+        if scfg.sparse_topk_blocks > 0:
+            # the forward already ran the selection on device; mirror the
+            # arithmetic here (ceil-div resident chain vs. selection width)
+            # rather than pulling sel_tables back across the transfer fence
+            bs = scfg.block_size
+            width = min(scfg.sparse_topk_blocks + scfg.sparse_recent_blocks,
+                        scfg.max_blocks_per_seq)
+            step_sel = step_cand = 0
+            for i in active:
+                n_chain = -(-int(lengths[i]) // bs)
+                sel = min(width, n_chain)
+                step_sel += sel
+                step_cand += n_chain
+                self._m_sparse_hist.observe(sel)
+            self._sparse_steps += 1
+            self._sparse_selected += step_sel
+            self._sparse_candidate += step_cand
+            self._m_sparse_steps.inc()
+            self._m_sparse_selected.inc(step_sel)
+            self._m_sparse_candidate.inc(step_cand)
+            self.trace.instant("sparse_select", track="pool", cat="cache",
+                               selected=step_sel, candidate=step_cand)
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])
@@ -1208,6 +1328,8 @@ class Scheduler:
                 windows[i] = (cur, w)
         active = [i for i in windows if self.slots[i] is not None]
         self._occupancy.append(
+            self._blocks_referenced() / self.pool.num_blocks)
+        self._occupancy_retained.append(
             self.pool.allocator.num_used / self.pool.num_blocks)
         if not active:
             return False
@@ -1420,6 +1542,17 @@ class Scheduler:
             swapped_bytes=self.bm.swapped_bytes,
             mean_occupancy=(float(np.mean(self._occupancy))
                             if self._occupancy else 0.0),
+            mean_occupancy_retained=(float(np.mean(self._occupancy_retained))
+                                     if self._occupancy_retained else 0.0),
+            sparse_topk=self.scfg.sparse_topk_blocks,
+            sparse_recent=self.scfg.sparse_recent_blocks,
+            sparse_steps=self._sparse_steps,
+            mean_selected_blocks=(self._sparse_selected
+                                  / max(self._lane_steps, 1)
+                                  if self._sparse_steps else 0.0),
+            mean_candidate_blocks=(self._sparse_candidate
+                                   / max(self._lane_steps, 1)
+                                   if self._sparse_steps else 0.0),
             mean_prefill_batch=(self._prefill_lanes_total
                                 / max(self.prefill_chunks, 1)),
             speculate_k=self.scfg.speculate_k,

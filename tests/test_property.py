@@ -449,6 +449,12 @@ def test_router_admission_ledger_conservation(ops, n, num_blocks):
 
     def check():
         board.check()
+        # regression: the imbalance gauge must be finite at EVERY point in a
+        # run — before the first route (all replicas at zero) and while some
+        # replicas have yet to see traffic (zero-routed used to yield inf)
+        imb = board.imbalance()
+        assert imb == imb and imb != float("inf"), imb
+        assert imb >= 1.0, imb
         for j in range(n):
             assert board.waiting[j] == len(waiting[j])
             assert board.resident[j] == len(resident[j])
@@ -502,6 +508,22 @@ def test_router_admission_ledger_conservation(ops, n, num_blocks):
     assert sum(board.waiting) + sum(board.resident) == 0
     assert board.submitted == board.retired == uid
     assert all(p.allocator.num_free == num_blocks for p in pools)
+
+
+def test_router_imbalance_zero_routed_regression():
+    """A replica that never saw a request must not poison the imbalance
+    metric: the gauge covers replicas WITH traffic (1.0 when even), never
+    inf/NaN, and stays 1.0 on a completely idle board."""
+    from repro.runtime.router import ReplicaBoard
+    board = ReplicaBoard(3)
+    assert board.imbalance() == 1.0          # idle board, no 0/0
+    board.route(0)                           # replica 1 and 2 still at zero
+    assert board.imbalance() == 1.0
+    board.route(0)
+    board.route(1)                           # routed == [2, 1, 0]
+    assert board.imbalance() == 2.0          # max/min over active replicas
+    board.route(2)
+    assert board.imbalance() == 2.0          # [2, 1, 1]
 
 
 @given(B=st.integers(1, 3), length=st.integers(1, 32), seed=st.integers(0, 50))

@@ -101,6 +101,31 @@ def test_phase_breakdown_plain_decode(tiny_elite_cfg, tiny_elite_model):
     assert "decode=" in table and "draft=" not in table
 
 
+def test_sample_tokens_temp0_is_exact_argmax():
+    """``temps[i] <= 0`` must take the argmax path STRUCTURALLY: a greedy
+    lane in a mixed batch never routes through the temperature division, so
+    its token is bitwise argmax — not softmax-at-clamped-temperature — even
+    when adjacent logits differ by less than the 1e-6 clamp would resolve."""
+    rng = np.random.default_rng(0)
+    B, V = 6, 64
+    logits = jnp.asarray(rng.normal(size=(B, V)).astype(np.float32))
+    # near-ties: a clamped-temperature softmax draw could pick either one
+    logits = logits.at[:, 1].set(logits[:, 0] + 1e-7)
+    temps = jnp.asarray([0.0, 0.8, -1.0, 0.0, 1.3, 0.0], jnp.float32)
+    top_ps = jnp.full((B,), 0.9, jnp.float32)
+    seeds = jnp.arange(B, dtype=jnp.int32)
+    counts = jnp.arange(B, dtype=jnp.int32)
+    got = np.asarray(serve_loop.sample_tokens(logits, temps, top_ps,
+                                              seeds, counts))
+    want = np.asarray(jnp.argmax(logits, axis=-1))
+    greedy = np.asarray(temps) <= 0.0
+    np.testing.assert_array_equal(got[greedy], want[greedy])
+    # and an all-greedy batch is the full argmax vector
+    got_all = np.asarray(serve_loop.sample_tokens(
+        logits, jnp.zeros((B,), jnp.float32), top_ps, seeds, counts))
+    np.testing.assert_array_equal(got_all, want)
+
+
 def test_phase_breakdown_speculative(tiny_elite_cfg, tiny_elite_model):
     """Speculative decode routes steps through draft/verify/accept instead
     of the plain decode phase; the sum invariant must still hold."""

@@ -1,0 +1,252 @@
+"""Latent-space sparse decode: block top-k over the paged pool.
+
+Exactness tier: when the selection width covers every resident block
+(``topk + recent >= max_blocks_per_seq``) the sparse path must reproduce the
+dense paged decode BIT for bit — f32 and int8 pools alike.  The selection
+then degenerates to the identity permutation of the block table and the
+per-block count mask equals the dense length mask, so the same kernel
+arithmetic runs in the same order (docs/serving.md#sparse-decode).
+
+Stability tier: genuinely sparse runs (width < resident blocks) must be
+invariant under every pool lifecycle edge — preemption by recompute or host
+swap, and prefix-cache block sharing.  Block summaries are a pure function
+of block content, so identical streams imply identical selections imply
+identical tokens.
+
+Mechanism tier: summary leaves exist exactly when ``block_summaries=True``,
+and their values equal a from-scratch masked mean/absmax over the block's
+valid rows — recomputed here from the (dequantized) pages themselves, which
+is the wall that keeps int8 selection scoring in the f32 world.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import PagedKVPool, is_block_summary
+from repro.runtime import serve_loop
+
+
+def _workload(cfg, n_req=4, seed=3, max_new=10, shared=0):
+    rng = np.random.default_rng(seed)
+    head = (rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
+            if shared else None)
+    reqs = []
+    for i in range(n_req):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(8, 18))).astype(np.int32)
+        if head is not None:
+            prompt = np.concatenate([head, prompt])
+        reqs.append(serve_loop.Request(
+            uid=i, prompt=prompt, max_new_tokens=max_new, arrival=i * 0.5))
+    return reqs
+
+
+def _run(params, buffers, cfg, workload, *, topk=0, recent=2, dtype=jnp.float32,
+         num_blocks=64, admission="preempt", eviction="recompute", chunk=4,
+         max_slots=2, prefix_cache=False, block_size=4, max_len=64):
+    scfg = serve_loop.SchedulerConfig(
+        max_slots=max_slots, block_size=block_size, num_blocks=num_blocks,
+        max_len=max_len, prefill_bucket=4, prefill_chunk_tokens=chunk,
+        admission=admission, eviction=eviction, prefix_cache=prefix_cache,
+        cache_dtype=dtype, sparse_topk_blocks=topk,
+        sparse_recent_blocks=recent)
+    sched = serve_loop.Scheduler(params, buffers, cfg, scfg)
+    report = sched.run(workload)
+    return {r.uid: list(r.generated) for r in sched.finished}, report, sched
+
+
+# ---------------------------------------------------------------------------
+# exactness: full selection width == dense, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, "int8"])
+def test_sparse_full_width_bitwise_dense(tiny_elite_cfg, tiny_elite_model,
+                                         dtype):
+    """``topk + recent >= max_blocks_per_seq`` clamps the selection width to
+    the whole block table: top_k over the score row is then a permutation,
+    the ascending sort restores the identity, and the per-block count mask
+    equals the dense length mask — same arrays, same kernel, same bits.
+    Holds for the int8 pool too (selection scores dequantized summaries but
+    a full-width selection never drops a block)."""
+    params, buffers = tiny_elite_model
+    dense, dense_rep, _ = _run(params, buffers, tiny_elite_cfg,
+                               _workload(tiny_elite_cfg), dtype=dtype)
+    out, rep, _ = _run(params, buffers, tiny_elite_cfg,
+                       _workload(tiny_elite_cfg), dtype=dtype, topk=64)
+    assert out == dense
+    assert dense_rep.sparse_steps == 0 and dense_rep.sparse_topk == 0
+    assert rep.sparse_steps > 0 and rep.sparse_topk == 64
+    # full width: every resident block attended
+    assert rep.mean_selected_blocks == rep.mean_candidate_blocks > 0
+
+
+def test_sparse_subblock_context(tiny_elite_cfg, tiny_elite_model):
+    """Contexts shorter than one block are the degenerate edge: a single
+    resident block, forced into the recent tail, count < block_size.  Sparse
+    must equal dense exactly and the accounting must report exactly one
+    candidate block per lane-step."""
+    params, buffers = tiny_elite_model
+    prompts = [np.random.default_rng(5 + i).integers(
+        0, tiny_elite_cfg.vocab_size, 2 + i).astype(np.int32)
+        for i in range(3)]
+    wl = lambda: [serve_loop.Request(uid=i, prompt=p, max_new_tokens=4,
+                                     arrival=float(i))
+                  for i, p in enumerate(prompts)]
+    kw = dict(block_size=16, chunk=0, max_len=32)
+    dense, _, _ = _run(params, buffers, tiny_elite_cfg, wl(), **kw)
+    out, rep, _ = _run(params, buffers, tiny_elite_cfg, wl(), topk=1,
+                       recent=1, **kw)
+    assert out == dense
+    assert rep.sparse_steps > 0
+    assert rep.mean_candidate_blocks == 1.0       # never grew past one block
+    assert rep.mean_selected_blocks == 1.0
+
+
+# ---------------------------------------------------------------------------
+# stability: genuinely sparse selection across pool lifecycle edges
+# ---------------------------------------------------------------------------
+
+def test_sparse_selection_stable_under_swap_preemption(tiny_elite_cfg,
+                                                       tiny_elite_model,
+                                                       stress_blocks):
+    """A genuinely sparse run (width < resident blocks) under forced host
+    swap produces the identical streams as an ample undisturbed pool: swap
+    carries the chain's pages AND its per-block summary rows byte-exactly,
+    so the selection after restore matches the uninterrupted one."""
+    params, buffers = tiny_elite_model
+    base, base_rep, _ = _run(params, buffers, tiny_elite_cfg,
+                             _workload(tiny_elite_cfg), topk=2, recent=1,
+                             num_blocks=64, admission="watermark")
+    assert base_rep.preemptions == 0
+    # the selection is really partial somewhere in the base run
+    assert base_rep.mean_selected_blocks < base_rep.mean_candidate_blocks
+    out, rep, sched = _run(params, buffers, tiny_elite_cfg,
+                           _workload(tiny_elite_cfg), topk=2, recent=1,
+                           num_blocks=stress_blocks(9), eviction="swap")
+    assert out == base
+    assert rep.preemptions > 0
+    assert rep.swap_outs > 0 and rep.swap_ins == rep.swap_outs
+    assert sched.pool.allocator.num_free == sched.pool.num_blocks
+
+
+def test_sparse_full_width_stable_under_recompute(tiny_elite_cfg,
+                                                  tiny_elite_model,
+                                                  stress_blocks):
+    """Full selection width is exactly dense, so recompute eviction stays
+    sound there: the sparse machinery (summary scatter, selection, sparse
+    kernel) runs under preemption pressure and the streams still match the
+    undisturbed pool bit for bit."""
+    params, buffers = tiny_elite_model
+    base, _, _ = _run(params, buffers, tiny_elite_cfg,
+                      _workload(tiny_elite_cfg), topk=64, num_blocks=64,
+                      admission="watermark")
+    out, rep, _ = _run(params, buffers, tiny_elite_cfg,
+                       _workload(tiny_elite_cfg), topk=64,
+                       num_blocks=stress_blocks(9), eviction="recompute")
+    assert out == base
+    assert rep.preemptions > 0
+
+
+def test_sparse_partial_recompute_rejected(tiny_elite_cfg, tiny_elite_model):
+    """The one unsound combination — partial selection width with
+    recompute-on-preempt — is rejected at construction: dense recompute
+    prefill cannot reproduce streams whose lower layers attended sparsely,
+    so it would silently fork the output stream."""
+    params, buffers = tiny_elite_model
+    scfg = serve_loop.SchedulerConfig(
+        max_slots=2, block_size=4, num_blocks=16, max_len=64,
+        sparse_topk_blocks=2, sparse_recent_blocks=1,
+        admission="preempt", eviction="recompute")
+    with pytest.raises(AssertionError, match="swap"):
+        serve_loop.Scheduler(params, buffers, tiny_elite_cfg, scfg)
+
+
+def test_sparse_prefix_cache_invariant(tiny_elite_cfg, tiny_elite_model):
+    """Prefix-cache hits are invisible to sparse selection: a shared block's
+    summary was written by the original prefill from the identical content a
+    re-prefill would produce, and COW privatization copies the summary rows
+    with the block."""
+    params, buffers = tiny_elite_model
+    wl = lambda: _workload(tiny_elite_cfg, shared=12, seed=7)
+    base, _, _ = _run(params, buffers, tiny_elite_cfg, wl(), topk=2, recent=1,
+                      eviction="swap", prefix_cache=False)
+    out, rep, _ = _run(params, buffers, tiny_elite_cfg, wl(), topk=2,
+                       recent=1, eviction="swap", prefix_cache=True)
+    assert out == base
+    assert rep.prefix_cache_hits > 0 and rep.prefix_cache_hit_tokens > 0
+    assert rep.sparse_steps > 0
+
+
+# ---------------------------------------------------------------------------
+# mechanism: summary leaves and their values (f32 and dequantized-int8)
+# ---------------------------------------------------------------------------
+
+def test_sparse_requires_plain_decode(tiny_elite_cfg, tiny_elite_model):
+    """Sparse selection scores ONE query per lane; the speculative verify
+    window has none, so the combination is rejected at construction."""
+    params, buffers = tiny_elite_model
+    scfg = serve_loop.SchedulerConfig(
+        max_slots=2, block_size=4, num_blocks=16, max_len=32,
+        sparse_topk_blocks=2, speculate_k=2)
+    with pytest.raises(AssertionError, match="mutually exclusive"):
+        serve_loop.Scheduler(params, buffers, tiny_elite_cfg, scfg)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, "int8"])
+def test_block_summary_parity_vs_recompute(tiny_elite_cfg, tiny_elite_model,
+                                           dtype):
+    """Stored summary leaves equal a from-scratch masked mean/absmax over
+    each chain block's valid rows, computed here from the pages themselves —
+    DEQUANTIZED first for the int8 pool, so selection scoring sees f32-world
+    statistics regardless of the storage dtype.  Off-chain blocks stay
+    zero."""
+    from repro.models import lm
+    params, buffers = tiny_elite_model
+    cfg = tiny_elite_cfg
+    bs, sp = 4, 11
+    pool = PagedKVPool(cfg, num_blocks=16, block_size=bs, dtype=dtype,
+                       block_summaries=True)
+    latent = "c" if "c" in pool.pages["p0"] else "c_k"
+    for layer in pool.pages.values():
+        assert layer[latent + "_blkmean"].dtype == jnp.float32
+        assert layer[latent + "_blkmax"].shape == \
+            (layer[latent].shape[0], pool.num_blocks, layer[latent].shape[-1])
+    prompt = (np.arange(sp) * 5 % cfg.vocab_size).astype(np.int32)
+    pool.ensure_capacity(0, sp)
+    toks = np.zeros((1, 12), np.int32)
+    toks[0, :sp] = prompt
+    sm = pool.prefill_slot_mapping(0, 0, sp, 12)[None]
+    _, pool.pages = lm.apply_prefill_paged(
+        params, buffers, cfg, {"tokens": jnp.asarray(toks)}, pool.pages,
+        jnp.asarray(sm))
+    chain = pool.block_table(0)
+    for layer in pool.pages.values():
+        content = np.asarray(layer[latent], np.float32)   # [n_super, slots, d]
+        if latent + "_scale" in layer:
+            content = content * np.asarray(
+                layer[latent + "_scale"], np.float32)[..., None]
+        mean = np.asarray(layer[latent + "_blkmean"])
+        amax = np.asarray(layer[latent + "_blkmax"])
+        for j, b in enumerate(chain):
+            count = min(sp - j * bs, bs)
+            rows = content[:, b * bs:b * bs + count]      # valid rows only
+            np.testing.assert_allclose(mean[:, b], rows.mean(axis=1),
+                                       atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(amax[:, b],
+                                       np.abs(rows).max(axis=1),
+                                       atol=1e-5, rtol=1e-5)
+        off_chain = [b for b in range(pool.num_blocks) if b not in chain]
+        assert not mean[:, off_chain].any()
+        assert not amax[:, off_chain].any()
+
+
+def test_summary_leaves_gated_by_flag(tiny_elite_cfg):
+    """No sparse flag, no summary leaves — the dense pool's page pytree (and
+    its bytes/token accounting) is untouched by this feature."""
+    dense = PagedKVPool(tiny_elite_cfg, num_blocks=8, block_size=4)
+    sparse = PagedKVPool(tiny_elite_cfg, num_blocks=8, block_size=4,
+                         block_summaries=True)
+    assert not any(is_block_summary(k) for layer in dense.pages.values()
+                   for k in layer)
+    assert any(is_block_summary(k) for layer in sparse.pages.values()
+               for k in layer)

@@ -38,6 +38,13 @@ Metrics checks (Prometheus text exposition format):
   self-consistent: ``serve_pool_quantized`` must be exactly 0 or 1,
   ``serve_pool_bytes_per_token`` must be positive, and no member may
   be negative
+* the ``serve_sparse_*`` family (sparse block-top-k decode) is
+  all-or-nothing — dense runs export none of it, sparse runs export all
+  six instruments (``serve_sparse_selected_blocks`` is a histogram, so
+  its ``_bucket``/``_sum``/``_count`` samples count) — non-negative,
+  with ``serve_sparse_topk`` positive and selected blocks never
+  exceeding candidate blocks; ``sparse_select`` instants need numeric
+  ``selected``/``candidate`` args
 * the name-encoded ``serve_replica_{i}_*`` family (the router's
   per-replica instruments — the registry has no labels by design) is
   all-or-nothing across BOTH dimensions: replica ids must be contiguous
@@ -69,7 +76,8 @@ _METRIC_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 #: required numeric args per prefix-cache instant (serve_loop/core.cache emit)
 _CACHE_INSTANT_ARGS = {"prefix_hit": ("tokens", "blocks"),
                        "prefix_miss": ("tokens",),
-                       "cow": ("block", "copy")}
+                       "cow": ("block", "copy"),
+                       "sparse_select": ("selected", "candidate")}
 #: the complete serve_prefix_cache_* instrument family — all-or-nothing
 _PC_FAMILY = ("serve_prefix_cache_hits_total",
               "serve_prefix_cache_misses_total",
@@ -82,6 +90,15 @@ _POOL_FAMILY = ("serve_pool_blocks_used",
                 "serve_pool_quantized",
                 "serve_pool_bytes_per_token",
                 "serve_pool_allocated_bytes")
+#: the complete serve_sparse_* instrument family — all-or-nothing (absent
+#: entirely in dense runs; serve_sparse_selected_blocks is a histogram, so
+#: its _bucket/_sum/_count samples belong to the family too)
+_SPARSE_FAMILY = ("serve_sparse_topk",
+                  "serve_sparse_recent",
+                  "serve_sparse_steps_total",
+                  "serve_sparse_selected_blocks_total",
+                  "serve_sparse_candidate_blocks_total",
+                  "serve_sparse_selected_blocks")
 #: per-replica suffixes the router exports for EVERY replica id
 #: (mirrors runtime/router.py::REPLICA_METRIC_SUFFIXES)
 _REPLICA_SUFFIXES = ("submitted_total", "completed_total", "waiting",
@@ -335,6 +352,32 @@ def check_metrics(path: Path) -> int:
         if bpt is not None and bpt <= 0:
             err(f"{path}: serve_pool_bytes_per_token must be positive, "
                 f"got {bpt}")
+
+    # serve_sparse_* family: all-or-nothing and self-consistent
+    def _sparse_base(n):
+        return re.sub(r"_(bucket|sum|count)$", "", n) \
+            if n.startswith("serve_sparse_selected_blocks_") else n
+    sparse_vals = {n: v for n, _, v in samples
+                   if n in _SPARSE_FAMILY and types.get(n) != "histogram"}
+    sparse_seen = {_sparse_base(n) for n, _, _ in samples
+                   if n.startswith("serve_sparse_")}
+    for n in sorted(sparse_seen - set(_SPARSE_FAMILY)):
+        err(f"{path}: unknown serve_sparse_* instrument {n!r}")
+    if sparse_seen:
+        for n in _SPARSE_FAMILY:
+            if n not in sparse_seen:
+                err(f"{path}: serve_sparse_* family incomplete — missing {n}")
+        for n, v in sorted(sparse_vals.items()):
+            if v < 0:
+                err(f"{path}: {n} is negative ({v})")
+        if sparse_vals.get("serve_sparse_topk", 1) <= 0:
+            err(f"{path}: serve_sparse_topk must be positive when the "
+                f"sparse family is exported")
+        sel = sparse_vals.get("serve_sparse_selected_blocks_total")
+        cand = sparse_vals.get("serve_sparse_candidate_blocks_total")
+        if sel is not None and cand is not None and sel > cand:
+            err(f"{path}: sparse selected blocks ({sel}) exceed candidate "
+                f"blocks ({cand})")
 
     # serve_replica_{i}_* family: all-or-nothing over ids × suffixes
     replica = {}                             # (id, suffix) -> value
